@@ -1,0 +1,103 @@
+"""Generate the EXPERIMENTS.md tables from the dry-run/bench artifacts.
+
+    PYTHONPATH=src python -m benchmarks.make_report > results/tables.md
+"""
+from __future__ import annotations
+
+import json
+from pathlib import Path
+
+D = Path("results/dryrun")
+
+
+def load(mesh: str, tag: str):
+    out = {}
+    for f in sorted(D.glob(f"*_{mesh}{'_' + tag if tag else ''}.json")):
+        r = json.loads(f.read_text())
+        if (r.get("tag") or "") != tag:
+            continue
+        out[(r["arch"], r["shape"])] = r
+    return out
+
+
+def fmt_s(x):
+    if x is None:
+        return "—"
+    if x >= 100:
+        return f"{x:.0f}"
+    if x >= 1:
+        return f"{x:.1f}"
+    return f"{x:.3f}"
+
+
+def dryrun_table():
+    base = load("pod16x16", "")
+    multi = load("pod2x16x16", "")
+    print("| arch | shape | 16×16 | 2×16×16 | compile(s) | temp bytes/dev |")
+    print("|---|---|---|---|---|---|")
+    for (a, s), r in base.items():
+        m = multi.get((a, s), {})
+        st = r["status"]
+        st2 = m.get("status", "?")
+        comp = r.get("compile_s", "—")
+        mem = r.get("memory", {}).get("temp_size_in_bytes")
+        mems = f"{mem/1e9:.1f} GB" if mem else "—"
+        print(f"| {a} | {s} | {st} | {st2} | {comp} | {mems} |")
+
+
+def roofline_table():
+    cost = load("pod16x16", "cost")
+    print("| arch | shape | T_compute(s) | T_memory(s) | T_coll(s) | dominant | MODEL/HLO | note |")
+    print("|---|---|---|---|---|---|---|---|")
+    for (a, s), r in sorted(cost.items()):
+        if r["status"] == "skipped":
+            print(f"| {a} | {s} | — | — | — | — | — | skipped: {r['reason'][:40]} |")
+            continue
+        if r["status"] != "ok":
+            print(f"| {a} | {s} | — | — | — | — | — | FAILED |")
+            continue
+        u = r.get("useful_ratio")
+        print(
+            f"| {a} | {s} | {fmt_s(r['t_compute'])} | {fmt_s(r['t_memory'])} | "
+            f"{fmt_s(r['t_collective'])} | {r['dominant']} | "
+            f"{100 * u:.0f}% | |"
+        )
+
+
+def perf_rows(tag_pairs):
+    cost = load("pod16x16", "cost")
+    print("| cell | variant | T_compute | T_memory | T_coll | dominant | Δdominant |")
+    print("|---|---|---|---|---|---|---|")
+    for (a, s, tag, label) in tag_pairs:
+        base = cost.get((a, s))
+        opt = load("pod16x16", tag).get((a, s))
+        if not base or base["status"] != "ok":
+            continue
+        dom = base["dominant"]
+        print(f"| {a} × {s} | baseline | {fmt_s(base['t_compute'])} | "
+              f"{fmt_s(base['t_memory'])} | {fmt_s(base['t_collective'])} | {dom} | |")
+        if opt and opt["status"] == "ok":
+            delta = 1 - opt[f"t_{dom}"] / base[f"t_{dom}"]
+            print(f"| | {label} | {fmt_s(opt['t_compute'])} | {fmt_s(opt['t_memory'])} | "
+                  f"{fmt_s(opt['t_collective'])} | {opt['dominant']} | -{100*delta:.0f}% |")
+
+
+if __name__ == "__main__":
+    import sys
+
+    which = sys.argv[1] if len(sys.argv) > 1 else "all"
+    if which in ("all", "dryrun"):
+        print("### Dry-run matrix\n")
+        dryrun_table()
+        print()
+    if which in ("all", "roofline"):
+        print("### Roofline (corrected cost probes, single-pod)\n")
+        roofline_table()
+        print()
+    if which in ("all", "perf"):
+        print("### Perf iterations\n")
+        perf_rows([
+            ("mistral-large-123b", "train_4k", "opt1", "+vp-loss +act-shard"),
+            ("yi-34b", "prefill_32k", "opt1", "+vp-loss +act-shard"),
+            ("deepseek-v2-lite-16b", "train_4k", "opt1", "+vp-loss +act-shard"),
+        ])

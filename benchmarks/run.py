@@ -1,0 +1,150 @@
+"""Benchmark driver — one section per paper table/figure.
+
+    PYTHONPATH=src python -m benchmarks.run [--fast] [--skip-apps] [--skip-roofline]
+
+Sections:
+  1. Paper §6 (figs. 11-18): the 8 applications, latency-hiding vs
+     blocking — waiting-time % and speedup (the paper's two metrics),
+     plus the beyond-paper fusion mode on the stencil apps.
+  2. §5.7.2 dependency-system overhead: heuristic vs full DAG.
+  3. Kernel microbenches (CSV: name,us_per_call,derived).
+  4. Roofline table from the dry-run artifacts (if present).
+"""
+from __future__ import annotations
+
+import argparse
+import json
+import sys
+from pathlib import Path
+
+
+def section(title):
+    print(f"\n{'=' * 72}\n{title}\n{'=' * 72}", flush=True)
+
+
+def run_paper_apps(fast: bool):
+    from benchmarks.paper_apps import APPS, run_app
+
+    section("1. Paper §6 — 8 applications, latency-hiding vs blocking (16 procs)")
+    small = dict(
+        fractal=dict(n=256, iters=8),
+        black_scholes=dict(n=200_000, iters=4),
+        nbody=dict(n=384, steps=2),
+        knn=dict(n=1024, d=32),
+        lbm2d=dict(h=256, w=256, steps=3),
+        lbm3d=dict(d=32, h=32, w=32, steps=2),
+        jacobi=dict(n=512, iters=6),
+        jacobi_stencil=dict(n=512, iters=6),
+    )
+    print(f"{'app':16s} {'wait% LH':>9s} {'wait% BL':>9s} {'spdup LH':>9s} "
+          f"{'spdup BL':>9s} {'comm MB':>9s}  paper(16c)")
+    paper = {
+        "fractal": "wait ~0/~0, 18.8x",
+        "black_scholes": "wait ~0/~0, 15.4x",
+        "nbody": "17.2x LH vs 17.8x BL",
+        "knn": "12.5x/12.6x",
+        "lbm2d": "wait 13%/19%",
+        "lbm3d": "wait 9%/16%",
+        "jacobi": "wait 2%/54%, 12.8x/5.9x",
+        "jacobi_stencil": "wait 9%/62%, 18.4x/7.7x",
+    }
+    rows = []
+    import numpy as np
+
+    for name in APPS:
+        kw = small[name] if fast else {}
+        st_lh, r_lh = run_app(name, mode="latency_hiding", **kw)
+        st_bl, r_bl = run_app(name, mode="blocking", **kw)
+        assert r_lh is None or np.allclose(r_lh, r_bl, equal_nan=True)
+        rows.append(dict(app=name,
+                         wait_lh=st_lh.wait_fraction, wait_bl=st_bl.wait_fraction,
+                         sp_lh=st_lh.speedup, sp_bl=st_bl.speedup,
+                         makespan_lh=st_lh.makespan,
+                         comm_mb=st_lh.comm_bytes / 1e6))
+        print(f"{name:16s} {st_lh.wait_fraction*100:8.1f}% {st_bl.wait_fraction*100:8.1f}% "
+              f"{st_lh.speedup:9.2f} {st_bl.speedup:9.2f} {st_lh.comm_bytes/1e6:9.2f}  {paper[name]}")
+
+    # beyond-paper: §7 ufunc fusion on the stencil app.  The honest metric
+    # is the MAKESPAN ratio — fusion shrinks the sequential work (fewer
+    # memory passes), so "speedup vs its own sequential" understates it.
+    name = "jacobi_stencil"
+    kw = small[name] if fast else {}
+    st_fu, r_fu = run_app(name, mode="latency_hiding", fusion=True, **kw)
+    _, r_plain = run_app(name, mode="latency_hiding", **kw)
+    assert np.allclose(r_fu, r_plain)
+    mk_u = rows[-1]["makespan_lh"]
+    print(f"\n  fusion(beyond-paper) {name}: makespan {st_fu.makespan*1e3:.1f}ms "
+          f"vs {mk_u*1e3:.1f}ms unfused ({mk_u/st_fu.makespan:.2f}x wall-clock) "
+          f"wait {st_fu.wait_fraction*100:.1f}% ops {st_fu.n_compute_ops}c/{st_fu.n_comm_ops}m")
+    return rows
+
+
+def run_depsys(fast: bool):
+    from benchmarks.depsys_overhead import rows
+
+    section("2. §5.7.2 dependency-system overhead — heuristic vs full DAG")
+    print(f"{'n_ops':>8s} {'heur us/op':>11s} {'dag us/op':>11s} {'heur scans':>11s} "
+          f"{'dag scans':>11s} {'speedup':>8s}")
+    for r in rows((500, 1000, 2000) if fast else (500, 1000, 2000, 4000, 8000)):
+        print(f"{r['n_ops']:8d} {r['heuristic_us_per_op']:11.2f} {r['dag_us_per_op']:11.2f} "
+              f"{r['heuristic_scans']:11d} {r['dag_scans']:11d} {r['speedup']:8.1f}")
+
+
+def run_kernels():
+    from benchmarks.kernel_bench import rows
+
+    section("3. Kernel microbenches (name,us_per_call,derived)")
+    for r in rows():
+        print(f"{r['name']},{r['us_per_call']:.1f},{r['derived']}")
+
+
+def run_roofline(results_dir="results/dryrun"):
+    section("4. Roofline table (from dry-run artifacts; cost-probe records "
+            "preferred — see EXPERIMENTS.md §Roofline for the while-loop "
+            "FLOP-undercount correction)")
+    d = Path(results_dir)
+    base, cost = {}, {}
+    for f in sorted(d.glob("*.json")) if d.exists() else []:
+        r = json.loads(f.read_text())
+        key = (r["arch"], r["shape"], r["mesh"])
+        tag = r.get("tag") or ""
+        if tag == "cost":
+            cost[key] = r
+        elif tag == "":
+            base[key] = r
+    recs = [cost.get(k, v) for k, v in base.items()]
+    if not recs:
+        print("  (no dry-run artifacts found — run `python -m repro.launch.dryrun --all` first)")
+        return
+    print(f"{'arch':22s} {'shape':12s} {'mesh':10s} {'t_comp(s)':>10s} {'t_mem(s)':>10s} "
+          f"{'t_coll(s)':>10s} {'dominant':>10s} {'useful':>7s}")
+    for r in recs:
+        if r["status"] == "ok":
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:10s} "
+                  f"{r['t_compute']:10.4f} {r['t_memory']:10.4f} {r['t_collective']:10.4f} "
+                  f"{r['dominant']:>10s} {100*(r.get('useful_ratio') or 0):6.1f}%")
+        else:
+            reason = r.get("reason", r.get("error", ""))[:60]
+            print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:10s} {r['status']:>10s}  {reason}")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--fast", action="store_true", help="reduced sizes (CI)")
+    ap.add_argument("--skip-apps", action="store_true")
+    ap.add_argument("--skip-depsys", action="store_true")
+    ap.add_argument("--skip-kernels", action="store_true")
+    ap.add_argument("--skip-roofline", action="store_true")
+    args = ap.parse_args()
+    if not args.skip_apps:
+        run_paper_apps(args.fast)
+    if not args.skip_depsys:
+        run_depsys(args.fast)
+    if not args.skip_kernels:
+        run_kernels()
+    if not args.skip_roofline:
+        run_roofline()
+
+
+if __name__ == "__main__":
+    main()

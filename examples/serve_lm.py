@@ -1,0 +1,10 @@
+"""Serve a small model with batched requests: prefill + decode loop,
+exercising every cache type (GQA ring/linear, MLA latent, SSM, wkv).
+
+    PYTHONPATH=src python examples/serve_lm.py
+"""
+from repro.launch.serve import serve
+
+for arch in ("granite-3-8b", "deepseek-v2-lite-16b", "zamba2-2.7b", "rwkv6-3b"):
+    serve(arch, reduced=True, batch=2, prompt_len=16, gen=16)
+print("all families served ✓")

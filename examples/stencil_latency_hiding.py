@@ -1,0 +1,42 @@
+"""The paper's flagship experiment (figs. 10/18), runnable end-to-end:
+the Jacobi stencil with latency-hiding vs blocking communication, plus
+the beyond-paper fused (§7) variant and the TPU shard_map mapping.
+
+    PYTHONPATH=src python examples/stencil_latency_hiding.py
+"""
+import numpy as np
+
+from benchmarks.paper_apps import run_app
+
+N, ITERS = 1024, 6
+
+print(f"Jacobi stencil {N}x{N}, {ITERS} sweeps, 16 processes "
+      f"(paper fig. 18 setup)\n")
+
+st_lh, r_lh = run_app("jacobi_stencil", mode="latency_hiding", n=N, iters=ITERS, block_size=128)
+st_bl, r_bl = run_app("jacobi_stencil", mode="blocking", n=N, iters=ITERS, block_size=128)
+st_fu, r_fu = run_app("jacobi_stencil", mode="latency_hiding", fusion=True, n=N, iters=ITERS, block_size=128)
+np.testing.assert_allclose(r_lh, r_bl)
+np.testing.assert_allclose(r_lh, r_fu)
+
+print(f"{'variant':24s} {'makespan':>10s} {'wait%':>7s} {'speedup':>8s}")
+for name, st in (("blocking (baseline)", st_bl),
+                 ("latency-hiding (paper)", st_lh),
+                 ("LH + fusion (§7, ours)", st_fu)):
+    print(f"{name:24s} {st.makespan*1e3:8.1f}ms {st.wait_fraction*100:6.1f}% {st.speedup:8.2f}")
+
+print(f"\nlatency-hiding wall-clock win: {st_bl.makespan/st_lh.makespan:.2f}x "
+      f"(paper: 18.4/7.7 = 2.4x at 16 cores)")
+
+# --- the same schedule as a compiled TPU/XLA program --------------------
+# (runs on CPU here; on a TPU pod the ppermute halo exchange overlaps the
+# interior update via async collective-permute — DESIGN.md §3)
+import jax
+import jax.numpy as jnp
+from repro.kernels.stencil import jacobi_sweep, jacobi_sweep_ref
+
+g = jnp.asarray(np.random.default_rng(0).random((256, 256)), jnp.float32)
+fused = jacobi_sweep(g, band=64)          # Pallas kernel (interpret=True)
+ref = jacobi_sweep_ref(g)                  # 5-view jnp chain (paper's form)
+print(f"\nPallas fused-sweep kernel matches the 5-view reference: "
+      f"{bool(jnp.allclose(fused, ref, atol=1e-6))}")

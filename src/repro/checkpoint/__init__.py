@@ -1,0 +1,4 @@
+"""repro.checkpoint — sharded, async, fault-tolerant checkpoints."""
+from .store import CheckpointManager, restore_latest, save_checkpoint
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_latest"]

@@ -1,0 +1,201 @@
+"""Sharded checkpoint store with async save, atomic commit and keep-N GC.
+
+Scale-out design (1000+ hosts):
+
+* **One file per host-shard** — every host serializes only the leaves (or
+  leaf-slices) it owns; there is no single-writer bottleneck and restore
+  is embarrassingly parallel.  On a real pod the ``shard_id`` is
+  ``jax.process_index()``; the tests exercise multi-shard layouts in one
+  process.
+* **Atomic commit** — shards are written to ``step_N.tmp/``; a manifest
+  (leaf treedef, shapes, dtypes, shard map, integrity checksums) is
+  written last and the directory is atomically renamed to ``step_N/``.
+  A crash mid-save never corrupts the latest valid checkpoint.
+* **Async save** — serialization happens on a background thread from a
+  host-side snapshot (``jax.device_get`` at call time), so the train loop
+  resumes immediately (save latency hides behind compute — the paper's
+  scheduling idea applied to I/O).
+* **keep-N GC** — old steps are deleted after a successful commit.
+
+Format: a tiny tagged binary per leaf (dtype/shape header + raw bytes) —
+no external deps, zlib-crc verified.
+"""
+from __future__ import annotations
+
+import json
+import os
+import shutil
+import struct
+import threading
+import zlib
+from pathlib import Path
+from typing import Any, Optional
+
+import jax
+import numpy as np
+
+__all__ = ["CheckpointManager", "save_checkpoint", "restore_latest"]
+
+_MAGIC = b"RPRC\x01"
+
+
+def _leaf_paths(tree) -> list[tuple[str, Any]]:
+    flat, _ = jax.tree_util.tree_flatten_with_path(tree)
+    return [(jax.tree_util.keystr(kp), leaf) for kp, leaf in flat]
+
+
+def _write_leaf(fh, arr: np.ndarray) -> dict:
+    data = np.ascontiguousarray(arr)
+    raw = data.tobytes()
+    crc = zlib.crc32(raw)
+    hdr = json.dumps(
+        {"dtype": str(data.dtype), "shape": list(data.shape), "crc": crc}
+    ).encode()
+    fh.write(_MAGIC)
+    fh.write(struct.pack("<I", len(hdr)))
+    fh.write(hdr)
+    fh.write(struct.pack("<Q", len(raw)))
+    fh.write(raw)
+    return {"dtype": str(data.dtype), "shape": list(data.shape), "crc": crc}
+
+
+def _read_leaf(fh) -> np.ndarray:
+    magic = fh.read(5)
+    if magic != _MAGIC:
+        raise IOError(f"bad leaf magic {magic!r}")
+    (hlen,) = struct.unpack("<I", fh.read(4))
+    hdr = json.loads(fh.read(hlen))
+    (rlen,) = struct.unpack("<Q", fh.read(8))
+    raw = fh.read(rlen)
+    if zlib.crc32(raw) != hdr["crc"]:
+        raise IOError("checkpoint leaf CRC mismatch")
+    return np.frombuffer(raw, dtype=np.dtype(hdr["dtype"])).reshape(hdr["shape"])
+
+
+class CheckpointManager:
+    def __init__(
+        self,
+        directory: str | Path,
+        *,
+        keep: int = 3,
+        shard_id: int = 0,
+        n_shards: int = 1,
+        is_primary: Optional[bool] = None,
+    ):
+        self.dir = Path(directory)
+        self.dir.mkdir(parents=True, exist_ok=True)
+        self.keep = keep
+        self.shard_id = shard_id
+        self.n_shards = n_shards
+        self.is_primary = (shard_id == 0) if is_primary is None else is_primary
+        self._thread: Optional[threading.Thread] = None
+        self._error: Optional[BaseException] = None
+
+    # -- save ---------------------------------------------------------------
+    def save(self, step: int, tree, *, blocking: bool = False) -> None:
+        """Snapshot ``tree`` (host transfer now) and serialize it
+        asynchronously.  Raises any error from the *previous* async save."""
+        self.wait()  # one in-flight save at a time; surfaces prior errors
+        snapshot = jax.tree.map(lambda a: np.asarray(jax.device_get(a)), tree)
+
+        def work():
+            try:
+                self._write(step, snapshot)
+            except BaseException as e:  # pragma: no cover
+                self._error = e
+
+        if blocking:
+            work()
+            self._raise_if_failed()
+        else:
+            self._thread = threading.Thread(target=work, daemon=True)
+            self._thread.start()
+
+    def _write(self, step: int, snapshot) -> None:
+        tmp = self.dir / f"step_{step:012d}.tmp"
+        final = self.dir / f"step_{step:012d}"
+        tmp.mkdir(parents=True, exist_ok=True)
+        leaves = _leaf_paths(snapshot)
+        # this host writes its assigned leaves (round-robin by index)
+        manifest = {"step": step, "n_shards": self.n_shards, "leaves": {}}
+        with open(tmp / f"shard_{self.shard_id:05d}.bin", "wb") as fh:
+            for i, (name, leaf) in enumerate(leaves):
+                if i % self.n_shards != self.shard_id:
+                    continue
+                meta = _write_leaf(fh, leaf)
+                manifest["leaves"][name] = {"index": i, **meta}
+        with open(tmp / f"manifest_{self.shard_id:05d}.json", "w") as fh:
+            json.dump(manifest, fh)
+        # commit: all shards present (single-process tests write them all
+        # into the same tmp dir; on a pod a barrier precedes the rename)
+        done = len(list(tmp.glob("manifest_*.json")))
+        if done >= self.n_shards and self.is_primary:
+            os.replace(tmp, final)
+            self._gc()
+
+    def _gc(self) -> None:
+        steps = sorted(self._steps())
+        for s in steps[: -self.keep] if self.keep else []:
+            shutil.rmtree(self.dir / f"step_{s:012d}", ignore_errors=True)
+
+    def wait(self) -> None:
+        if self._thread is not None:
+            self._thread.join()
+            self._thread = None
+        self._raise_if_failed()
+
+    def _raise_if_failed(self):
+        if self._error is not None:
+            err, self._error = self._error, None
+            raise RuntimeError("async checkpoint save failed") from err
+
+    # -- restore ------------------------------------------------------------
+    def _steps(self) -> list[int]:
+        return [
+            int(p.name.split("_")[1])
+            for p in self.dir.glob("step_*")
+            if p.is_dir() and not p.name.endswith(".tmp")
+        ]
+
+    def latest_step(self) -> Optional[int]:
+        steps = self._steps()
+        return max(steps) if steps else None
+
+    def restore(self, tree_like, step: Optional[int] = None):
+        """Restore into the structure of ``tree_like``; returns (tree, step).
+        Reads every shard file (each host needs only its own leaves on a
+        real pod; here we reassemble the full tree)."""
+        self.wait()
+        step = self.latest_step() if step is None else step
+        if step is None:
+            raise FileNotFoundError(f"no checkpoint in {self.dir}")
+        d = self.dir / f"step_{step:012d}"
+        names = [name for name, _ in _leaf_paths(tree_like)]
+        by_name: dict[str, np.ndarray] = {}
+        for mf in sorted(d.glob("manifest_*.json")):
+            manifest = json.loads(mf.read_text())
+            shard = mf.name.replace("manifest", "shard").replace(".json", ".bin")
+            with open(d / shard, "rb") as fh:
+                for name in sorted(
+                    manifest["leaves"], key=lambda n: manifest["leaves"][n]["index"]
+                ):
+                    by_name[name] = _read_leaf(fh)
+        missing = [n for n in names if n not in by_name]
+        if missing:
+            raise IOError(f"checkpoint {d} missing leaves: {missing[:5]}...")
+        flat, tdef = jax.tree.flatten(tree_like)
+        restored = [
+            np.asarray(by_name[n]).astype(l.dtype).reshape(l.shape)
+            if hasattr(l, "dtype")
+            else by_name[n]
+            for n, l in zip(names, flat)
+        ]
+        return jax.tree.unflatten(tdef, restored), step
+
+
+def save_checkpoint(directory, step: int, tree, **kw) -> None:
+    CheckpointManager(directory, **kw).save(step, tree, blocking=True)
+
+
+def restore_latest(directory, tree_like, **kw):
+    return CheckpointManager(directory, **kw).restore(tree_like)

@@ -1,0 +1,33 @@
+"""repro.comm — the paper's communication patterns mapped to TPU/JAX.
+
+The paper's flush algorithm (§5.7) aggressively *initiates* communication
+and lazily evaluates compute so transfers hide behind local work.  Inside
+one XLA program the analogue is *op ordering*: every primitive here emits
+the collective (``ppermute`` / ``all_gather`` / ``psum_scatter``) **before**
+the compute that overlaps it, so XLA's async collectives
+(``collective-permute-start/done``) get the maximal overlap window.
+
+Each primitive has a ``overlap="ring"`` mode (the paper's latency-hiding
+schedule: blocked transfers interleaved with per-block compute — §5.4's
+sub-view-block walk) and an ``overlap="none"`` mode (the paper's blocking
+baseline: one monolithic collective on the critical path).
+"""
+from .collectives import (
+    ag_matmul,
+    halo_exchange,
+    jacobi_step_sharded,
+    matmul_rs,
+    ring_all_gather,
+    ring_reduce_scatter,
+    stencil_1d_sharded,
+)
+
+__all__ = [
+    "ag_matmul",
+    "matmul_rs",
+    "ring_all_gather",
+    "ring_reduce_scatter",
+    "halo_exchange",
+    "stencil_1d_sharded",
+    "jacobi_step_sharded",
+]

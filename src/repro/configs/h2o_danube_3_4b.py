@@ -1,0 +1,22 @@
+"""H2O-Danube3-4B — llama+mistral mix with sliding-window attention
+[arXiv:2401.16818; unverified].
+
+24L, d_model=3840, 32 heads / 8 KV heads (head_dim 120), d_ff=10240,
+vocab=32000, SWA window 4096 (danube-series default; unverified).
+"""
+from .base import ModelConfig
+
+CONFIG = ModelConfig(
+    arch_id="h2o-danube-3-4b",
+    family="dense",
+    n_layers=24,
+    d_model=3840,
+    n_heads=32,
+    n_kv_heads=8,
+    head_dim=120,
+    d_ff=10240,
+    vocab_size=32000,
+    layer_pattern="A",
+    swa_window=4096,
+    rope_theta=1e4,
+)

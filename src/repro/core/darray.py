@@ -1,0 +1,558 @@
+"""User-facing distributed arrays — the DistNumPy API surface (paper §5).
+
+``array(..., dist=True)`` etc. mirror the paper's only API difference from
+NumPy.  All operations on :class:`DistArray` are recorded lazily into the
+active :class:`~repro.core.engine.Runtime`; reading data back (``__array__``,
+``item``, comparisons) triggers an operation flush (§5.6).
+
+When the runtime is created with ``fusion=True``, elementwise expressions
+build :class:`Expr` trees that are merged into a single joint operation at
+materialization — the paper's §7 "merge calls to ufuncs" future work,
+implemented here as a beyond-paper optimization.
+"""
+from __future__ import annotations
+
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from . import ufunc as uf
+from .blocks import ViewSpec
+from .engine import ArrayBase, Runtime, current_runtime
+from .ufunc import UFunc
+
+__all__ = [
+    "DistArray",
+    "array",
+    "empty",
+    "zeros",
+    "ones",
+    "full",
+    "arange",
+    "random",
+    "add",
+    "subtract",
+    "multiply",
+    "divide",
+    "exp",
+    "log",
+    "sqrt",
+    "square",
+    "absolute",
+    "maximum",
+    "minimum",
+    "greater",
+    "less",
+    "where",
+    "matmul",
+    "dsum",
+    "dmin",
+    "dmax",
+    "roll",
+]
+
+Scalar = (int, float, complex, np.integer, np.floating, np.complexfloating)
+
+
+def _as_operand(x):
+    """DistArray -> (base, view); Expr -> materialized temp; scalar -> tag."""
+    if isinstance(x, DistArray):
+        return (x._base, x._view)
+    if isinstance(x, Expr):
+        return _as_operand(x.materialize())
+    if isinstance(x, Scalar):
+        return ("c", x)
+    raise TypeError(f"unsupported operand {type(x)}")
+
+
+def _result_meta(args) -> tuple[tuple[int, ...], np.dtype]:
+    shapes, dtypes = [], []
+    for a in args:
+        if isinstance(a, (DistArray, Expr)):
+            shapes.append(a.shape)
+            dtypes.append(a.dtype)
+        else:
+            dtypes.append(np.dtype(type(a)) if not isinstance(a, complex) else np.dtype(complex))
+    shape = np.broadcast_shapes(*shapes) if shapes else ()
+    dtype = np.result_type(*dtypes)
+    return tuple(shape), dtype
+
+
+class Expr:
+    """Unevaluated elementwise expression (fusion mode)."""
+
+    __slots__ = ("ufunc", "args", "shape", "dtype")
+
+    def __init__(self, ufunc: UFunc, args: tuple):
+        self.ufunc = ufunc
+        self.args = args
+        self.shape, self.dtype = _result_meta(args)
+
+    # -- fusion ---------------------------------------------------------
+    def _collect(self, leaves: list) -> object:
+        """Return a spec tree of ('leaf', idx) / ('const', v) / (ufunc, specs)."""
+        specs = []
+        for a in self.args:
+            if isinstance(a, Expr):
+                specs.append(a._collect(leaves))
+            elif isinstance(a, DistArray):
+                leaves.append(a)
+                specs.append(("leaf", len(leaves) - 1))
+            else:
+                specs.append(("const", a))
+        return (self.ufunc, tuple(specs))
+
+    def _cost_parts(self) -> tuple[int, float]:
+        """(#ops, heavy-compute surplus) of the tree."""
+        n, heavy = 1, max(0.0, self.ufunc.cost - 1.0)
+        for a in self.args:
+            if isinstance(a, Expr):
+                sn, sh = a._cost_parts()
+                n += sn
+                heavy += sh
+        return n, heavy
+
+    def fused_cost(self, n_leaves: int) -> float:
+        """Per-element cost of the fused op.  Plain ufunc chains are
+        memory-bound: a chain of k binary ufuncs moves ~3k·N bytes
+        (2 reads + 1 write each), the fused version (L+1)·N — that ratio is
+        the fusion win (HBM round-trip avoidance on TPU).  Heavy
+        (transcendental) compute stays additive."""
+        _, heavy = self._cost_parts()
+        return max(1.0, (n_leaves + 1) / 3.0) + heavy
+
+    def materialize(self, out: Optional["DistArray"] = None) -> "DistArray":
+        """Record ONE joint operation for the whole tree (§7 fusion)."""
+        rt = current_runtime()
+        leaves: list[DistArray] = []
+        spec = self._collect(leaves)
+        if out is not None and any(l._base is out._base for l in leaves):
+            # output aliases an input base: a single joint operation would
+            # let one fragment's write race another fragment's read.  Go
+            # through a fresh temporary (same rule NumPy's ufuncs need).
+            tmp = self.materialize(None)
+            rt.record_map(
+                uf.identity, (out._base, out._view), [(tmp._base, tmp._view)]
+            )
+            return out
+
+        def run(*arrays):
+            def ev(node):
+                tag = node[0]
+                if tag == "leaf":
+                    return arrays[node[1]]
+                if tag == "const":
+                    return node[1]
+                f, subs = node
+                return f(*[ev(s) for s in subs])
+
+            return ev(spec)
+
+        fused = UFunc(
+            name=f"fused[{self.ufunc.name}x{len(leaves)}]",
+            fn=run,
+            nin=len(leaves),
+            cost=self.fused_cost(len(leaves)),
+        )
+        if out is None:
+            out = empty(self.shape, dtype=self.dtype)
+        rt.record_map(fused, (out._base, out._view), [(l._base, l._view) for l in leaves])
+        return out
+
+    # -- readback (materialize + gather) ----------------------------------
+    def __array__(self, dtype=None, copy=None):
+        return self.materialize().__array__(dtype)
+
+    # -- operator sugar (mirrors DistArray) -------------------------------
+    def __add__(self, o):
+        return _apply(uf.add, self, o)
+
+    def __radd__(self, o):
+        return _apply(uf.add, o, self)
+
+    def __sub__(self, o):
+        return _apply(uf.subtract, self, o)
+
+    def __rsub__(self, o):
+        return _apply(uf.subtract, o, self)
+
+    def __mul__(self, o):
+        return _apply(uf.multiply, self, o)
+
+    def __rmul__(self, o):
+        return _apply(uf.multiply, o, self)
+
+    def __truediv__(self, o):
+        return _apply(uf.divide, self, o)
+
+    def __rtruediv__(self, o):
+        return _apply(uf.divide, o, self)
+
+    def __neg__(self):
+        return _apply(uf.negative, self)
+
+    def __pow__(self, o):
+        return _apply(uf.power, self, o)
+
+
+def _apply(ufn: UFunc, *args) -> Union["DistArray", Expr]:
+    """Apply a ufunc: build an Expr in fusion mode, else record immediately
+    into a fresh temporary (DistNumPy behaviour)."""
+    rt = current_runtime()
+    if rt.fusion:
+        return Expr(ufn, args)
+    shape, dtype = _result_meta(args)
+    out = empty(shape, dtype=dtype)
+    rt.record_map(ufn, (out._base, out._view), [_as_operand(a) for a in args])
+    return out
+
+
+class DistArray:
+    """An array-view over an array-base (paper §5.1)."""
+
+    __slots__ = ("_base", "_view", "_rt")
+
+    def __init__(self, base: ArrayBase, view: ViewSpec, rt: Runtime):
+        self._base = base
+        self._view = view
+        self._rt = rt
+
+    # -- metadata ----------------------------------------------------------
+    @property
+    def shape(self) -> tuple[int, ...]:
+        return self._view.vshape
+
+    @property
+    def ndim(self) -> int:
+        return self._view.ndim
+
+    @property
+    def dtype(self) -> np.dtype:
+        return self._base.dtype
+
+    @property
+    def size(self) -> int:
+        return self._view.size
+
+    def __repr__(self):
+        return f"DistArray(shape={self.shape}, dtype={self.dtype}, base={self._base.id})"
+
+    # -- views (§5.1: flat two-level hierarchy) ------------------------------
+    def _normalize_key(self, key) -> tuple[slice, ...]:
+        if not isinstance(key, tuple):
+            key = (key,)
+        out = []
+        it = iter(key)
+        for k in it:
+            if k is Ellipsis:
+                n_rest = sum(1 for x in key if x is not Ellipsis and x is not None)
+                out.extend([slice(None)] * (self.ndim - n_rest - len(out)))
+                continue
+            if isinstance(k, int):
+                L = self._view.vshape[len(out)]
+                if k < 0:
+                    k += L
+                out.append(slice(k, k + 1))
+            elif isinstance(k, slice):
+                out.append(k)
+            else:
+                raise TypeError(f"unsupported index {k!r}")
+        while len(out) < self.ndim:
+            out.append(slice(None))
+        return tuple(out)
+
+    def __getitem__(self, key) -> "DistArray":
+        view = self._view.compose_slice(self._normalize_key(key))
+        return DistArray(self._base, view, self._rt)
+
+    def __setitem__(self, key, value) -> None:
+        target = self[key]
+        tgt = (target._base, target._view)
+        if isinstance(value, Expr):
+            value.materialize(out=target)
+        elif isinstance(value, DistArray):
+            if value._base is target._base and value._view != target._view:
+                value = value.copy()  # overlapping self-assignment: snapshot
+            self._rt.record_map(uf.identity, tgt, [(value._base, value._view)])
+        elif isinstance(value, Scalar):
+            self._rt.record_fill(tgt, value)
+        elif isinstance(value, np.ndarray):
+            tmp = array(value)
+            self._rt.record_map(uf.identity, tgt, [(tmp._base, tmp._view)])
+        else:
+            raise TypeError(f"unsupported assignment {type(value)}")
+
+    def copy(self) -> "DistArray":
+        out = empty(self.shape, dtype=self.dtype)
+        self._rt.record_map(uf.identity, (out._base, out._view), [_as_operand(self)])
+        return out
+
+    # -- arithmetic -----------------------------------------------------------
+    def __add__(self, o):
+        return _apply(uf.add, self, o)
+
+    def __radd__(self, o):
+        return _apply(uf.add, o, self)
+
+    def __sub__(self, o):
+        return _apply(uf.subtract, self, o)
+
+    def __rsub__(self, o):
+        return _apply(uf.subtract, o, self)
+
+    def __mul__(self, o):
+        return _apply(uf.multiply, self, o)
+
+    def __rmul__(self, o):
+        return _apply(uf.multiply, o, self)
+
+    def __truediv__(self, o):
+        return _apply(uf.divide, self, o)
+
+    def __rtruediv__(self, o):
+        return _apply(uf.divide, o, self)
+
+    def __pow__(self, o):
+        return _apply(uf.power, self, o)
+
+    def __neg__(self):
+        return _apply(uf.negative, self)
+
+    def __iadd__(self, o):
+        self._rt.record_map(
+            uf.add, (self._base, self._view), [_as_operand(self), _as_operand(o)]
+        )
+        return self
+
+    def __isub__(self, o):
+        self._rt.record_map(
+            uf.subtract, (self._base, self._view), [_as_operand(self), _as_operand(o)]
+        )
+        return self
+
+    def __imul__(self, o):
+        self._rt.record_map(
+            uf.multiply, (self._base, self._view), [_as_operand(self), _as_operand(o)]
+        )
+        return self
+
+    # -- reductions --------------------------------------------------------
+    def _reduce(self, name: str, axis, keepdims: bool) -> "DistArray":
+        nd = self.ndim
+        if axis is None:
+            axes = tuple(range(nd))
+        elif isinstance(axis, int):
+            axes = (axis % nd,)
+        else:
+            axes = tuple(a % nd for a in axis)
+        if keepdims:
+            oshape = tuple(1 if d in axes else s for d, s in enumerate(self.shape))
+        else:
+            oshape = tuple(s for d, s in enumerate(self.shape) if d not in axes)
+        out = empty(oshape, dtype=self.dtype)
+        self._rt.record_reduce(
+            name, (out._base, out._view), (self._base, self._view), axes, keepdims
+        )
+        return out
+
+    def sum(self, axis=None, keepdims=False):
+        return self._reduce("add", axis, keepdims)
+
+    def min(self, axis=None, keepdims=False):
+        return self._reduce("minimum", axis, keepdims)
+
+    def max(self, axis=None, keepdims=False):
+        return self._reduce("maximum", axis, keepdims)
+
+    # -- readback (flush triggers, §5.6) -------------------------------------
+    def __array__(self, dtype=None, copy=None):
+        arr = self._rt.gather(self._base, self._view)
+        return arr.astype(dtype) if dtype is not None else arr
+
+    def to_numpy(self) -> np.ndarray:
+        return self.__array__()
+
+    def item(self) -> float:
+        return self.__array__().reshape(-1)[0].item()
+
+    def __float__(self):
+        return float(self.item())
+
+    def __bool__(self):
+        return bool(self.__array__().all())
+
+    def _cmp_scalar(self, other, op):
+        return op(float(self), float(other))
+
+    def __lt__(self, other):
+        if self.size == 1 and isinstance(other, Scalar + (DistArray,)):
+            return self._cmp_scalar(other, lambda a, b: a < b)
+        return _apply(uf.less, self, other)
+
+    def __gt__(self, other):
+        if self.size == 1 and isinstance(other, Scalar + (DistArray,)):
+            return self._cmp_scalar(other, lambda a, b: a > b)
+        return _apply(uf.greater, self, other)
+
+
+# ---------------------------------------------------------------------------
+# creation routines (the paper's only API delta: ``dist=`` flag)
+# ---------------------------------------------------------------------------
+
+def array(data, dtype=None, dist: bool = True, block_shape=None) -> DistArray:
+    rt = current_runtime()
+    np_data = np.asarray(data, dtype=dtype)
+    base = rt.new_base(np_data.shape, np_data.dtype, block_shape)
+    rt.scatter(base, np_data)
+    return DistArray(base, ViewSpec.full(np_data.shape), rt)
+
+
+def empty(shape, dtype=np.float64, dist: bool = True, block_shape=None) -> DistArray:
+    rt = current_runtime()
+    shape = (shape,) if isinstance(shape, int) else tuple(shape)
+    base = rt.new_base(shape, dtype, block_shape)
+    rt.fill_base(base, 0)  # deterministic contents; blocks must exist
+    return DistArray(base, ViewSpec.full(shape), rt)
+
+
+def zeros(shape, dtype=np.float64, dist: bool = True, block_shape=None) -> DistArray:
+    return full(shape, 0, dtype, dist, block_shape)
+
+
+def ones(shape, dtype=np.float64, dist: bool = True, block_shape=None) -> DistArray:
+    return full(shape, 1, dtype, dist, block_shape)
+
+
+def full(shape, value, dtype=np.float64, dist=True, block_shape=None) -> DistArray:
+    rt = current_runtime()
+    shape = (shape,) if isinstance(shape, int) else tuple(shape)
+    base = rt.new_base(shape, dtype, block_shape)
+    rt.fill_base(base, value)
+    return DistArray(base, ViewSpec.full(shape), rt)
+
+
+def arange(n, dtype=np.float64, block_shape=None) -> DistArray:
+    return array(np.arange(n, dtype=dtype), block_shape=block_shape)
+
+
+def random(shape, seed=0, dtype=np.float64, block_shape=None) -> DistArray:
+    rng = np.random.default_rng(seed)
+    shape = (shape,) if isinstance(shape, int) else tuple(shape)
+    return array(rng.random(shape).astype(dtype), block_shape=block_shape)
+
+
+# ---------------------------------------------------------------------------
+# module-level ufuncs / linalg / reductions
+# ---------------------------------------------------------------------------
+
+def add(a, b):
+    return _apply(uf.add, a, b)
+
+
+def subtract(a, b):
+    return _apply(uf.subtract, a, b)
+
+
+def multiply(a, b):
+    return _apply(uf.multiply, a, b)
+
+
+def divide(a, b):
+    return _apply(uf.divide, a, b)
+
+
+def exp(a):
+    return _apply(uf.exp, a)
+
+
+def log(a):
+    return _apply(uf.log, a)
+
+
+def sqrt(a):
+    return _apply(uf.sqrt, a)
+
+
+def square(a):
+    return _apply(uf.square, a)
+
+
+def absolute(a):
+    return _apply(uf.absolute, a)
+
+
+def maximum(a, b):
+    return _apply(uf.maximum, a, b)
+
+
+def minimum(a, b):
+    return _apply(uf.minimum, a, b)
+
+
+def greater(a, b):
+    return _apply(uf.greater, a, b)
+
+
+def less(a, b):
+    return _apply(uf.less, a, b)
+
+
+def where(c, a, b):
+    return _apply(uf.where, c, a, b)
+
+
+def dsum(a, axis=None, keepdims=False):
+    a = a.materialize() if isinstance(a, Expr) else a
+    return a.sum(axis, keepdims)
+
+
+def dmin(a, axis=None, keepdims=False):
+    a = a.materialize() if isinstance(a, Expr) else a
+    return a.min(axis, keepdims)
+
+
+def dmax(a, axis=None, keepdims=False):
+    a = a.materialize() if isinstance(a, Expr) else a
+    return a.max(axis, keepdims)
+
+
+def matmul(a, b, trans_a=False, trans_b=False) -> DistArray:
+    rt = current_runtime()
+    a = a.materialize() if isinstance(a, Expr) else a
+    b = b.materialize() if isinstance(b, Expr) else b
+    M = a.shape[1] if trans_a else a.shape[0]
+    Ka = a.shape[0] if trans_a else a.shape[1]
+    Kb = b.shape[1] if trans_b else b.shape[0]
+    N = b.shape[0] if trans_b else b.shape[1]
+    if Ka != Kb:
+        raise ValueError(f"matmul shape mismatch {a.shape} @ {b.shape}")
+    out = empty((M, N), dtype=np.result_type(a.dtype, b.dtype))
+    rt.record_matmul(
+        (out._base, out._view),
+        (a._base, a._view),
+        (b._base, b._view),
+        trans_a,
+        trans_b,
+    )
+    return out
+
+
+def roll(a: DistArray, shift: int, axis: int = 0) -> DistArray:
+    """np.roll equivalent: two strided copies (used by the LBM streaming
+    step).  C[..., s:, ...] = A[..., :-s, ...]; C[..., :s, ...] = A[..., n-s:, ...]."""
+    a = a.materialize() if isinstance(a, Expr) else a
+    n = a.shape[axis]
+    s = shift % n
+    out = empty(a.shape, dtype=a.dtype)
+    if s == 0:
+        out[...] = a
+        return out
+
+    def sl(lo, hi):
+        key = [slice(None)] * a.ndim
+        key[axis] = slice(lo, hi)
+        return tuple(key)
+
+    out[sl(s, n)] = a[sl(0, n - s)]
+    out[sl(0, s)] = a[sl(n - s, n)]
+    return out

@@ -1,0 +1,571 @@
+"""Lazy-evaluation engine (paper §5.5–§5.7).
+
+The :class:`Runtime` records every operation on distributed arrays instead
+of executing it (lazy evaluation, §5.6).  Operations are split into
+sub-view-block fragments (§5.2), each fragment becoming one operation-node
+whose access-nodes are inserted into per-base-block dependency lists
+(§5.7.2).  Remote operand fragments generate communication operation-nodes
+(transfer → scratch buffer) that the comm-first flush scheduler (§5.7)
+initiates aggressively.
+
+A *flush* (triggered by a read of distributed data, by the recorded-op
+threshold, or by context exit — §5.6) drains the dependency system through
+:func:`repro.core.scheduler.run_schedule`, simultaneously executing the
+real NumPy block work and accounting the timeline on the cluster model.
+"""
+from __future__ import annotations
+
+import itertools
+import threading
+import weakref
+from dataclasses import dataclass, field
+from typing import Optional, Sequence, Union
+
+import numpy as np
+
+from .blocks import (
+    Fragment,
+    Layout,
+    OperandSpec,
+    ViewSpec,
+    default_process_grid,
+    fragment_iteration_space,
+)
+from .graph import COMM, COMPUTE, AccessNode, DependencySystem, OperationNode
+from .scheduler import run_schedule
+from .timeline import GIGE_2012, ClusterSpec, TimelineResult
+from .ufunc import UFunc, get_ufunc, reduce_fn
+
+__all__ = ["Runtime", "ArrayBase", "current_runtime"]
+
+_base_ids = itertools.count(1)
+_scratch_ids = itertools.count(1)
+
+_tls = threading.local()
+
+
+def current_runtime() -> "Runtime":
+    rt = getattr(_tls, "runtime", None)
+    if rt is None:
+        raise RuntimeError("no active repro.core Runtime — use `with Runtime(...):`")
+    return rt
+
+
+# ---------------------------------------------------------------------------
+# Operation payloads (executed by the scheduler at schedule time)
+# ---------------------------------------------------------------------------
+
+# input reference: ("b", base_id, Fragment) local block piece,
+#                  ("s", scratch_id)        delivered/communicated piece,
+#                  ("c", constant)          python scalar
+
+
+@dataclass
+class MapPayload:
+    ufunc: UFunc
+    out_base: int
+    out_frag: Fragment
+    args: tuple  # ordered input references
+    out_dtype: np.dtype
+
+
+@dataclass
+class TransferPayload:
+    src: tuple  # ("b", base_id, Fragment) or ("s", scratch_id)
+    dst_scratch: int
+
+
+@dataclass
+class ReducePartialPayload:
+    ufunc_name: str
+    src: tuple
+    axes: tuple[int, ...]  # operand axes to reduce
+    dst_scratch: int
+    keepdims: bool = False
+
+
+@dataclass
+class CombinePayload:
+    ufunc_name: str
+    out_base: int
+    out_frag: Fragment
+    src_scratch: int
+    init: bool
+
+
+@dataclass
+class MatmulPayload:
+    out_base: int
+    out_frag: Fragment
+    a: tuple
+    b: tuple
+    trans_a: bool
+    trans_b: bool
+    init: bool
+
+
+@dataclass
+class FillPayload:
+    out_base: int
+    out_frag: Fragment
+    value: object
+
+
+class ArrayBase:
+    """The array-base (paper §5.1): owns the actual memory via the runtime's
+    block storage; never manipulated directly by the user."""
+
+    __slots__ = ("id", "shape", "dtype", "layout", "__weakref__")
+
+    def __init__(self, shape, dtype, layout):
+        self.id = next(_base_ids)
+        self.shape = tuple(shape)
+        self.dtype = np.dtype(dtype)
+        self.layout = layout
+
+    def __repr__(self):
+        return f"ArrayBase(id={self.id}, shape={self.shape}, dtype={self.dtype})"
+
+
+class Runtime:
+    """The DistNumPy-style runtime: lazy recording + comm-first flush."""
+
+    def __init__(
+        self,
+        nprocs: int = 4,
+        block_size: Union[int, tuple] = 128,
+        mode: str = "latency_hiding",
+        cluster: Optional[ClusterSpec] = None,
+        flush_threshold: int = 200_000,
+        execute: bool = True,
+        fusion: bool = False,
+    ):
+        self.nprocs = nprocs
+        self.block_size = block_size
+        self.mode = mode
+        self.cluster = (cluster or GIGE_2012).with_nprocs(nprocs)
+        self.flush_threshold = flush_threshold
+        self.execute = execute
+        self.fusion = fusion
+
+        self.deps = DependencySystem()
+        self.storage: dict[tuple, np.ndarray] = {}  # (base_id, coord) -> block
+        self.scratch: dict[int, np.ndarray] = {}
+        self._xfer_cache: dict[tuple, int] = {}
+        self._write_epoch: dict[tuple, int] = {}  # (base_id, coord) -> version
+        self._combine_seen: set = set()
+        self._dead_bases: set[int] = set()
+        self._live_bases: dict[int, bool] = {}
+        self.result = TimelineResult(mode=mode, cluster=self.cluster)
+        self.flush_count = 0
+        self._recorded_since_flush = 0
+        self._in_record = 0
+
+    # -- context management -------------------------------------------------
+    def __enter__(self):
+        if getattr(_tls, "runtime", None) is not None:
+            raise RuntimeError("nested Runtimes are not supported")
+        _tls.runtime = self
+        return self
+
+    def __exit__(self, exc_type, exc, tb):
+        if exc_type is None:
+            self.flush()  # §5.6 trigger 3: end of program
+        _tls.runtime = None
+        return False
+
+    # -- array creation -------------------------------------------------------
+    def _make_layout(self, shape, block_shape=None) -> Layout:
+        nd = len(shape)
+        if block_shape is None:
+            bs = self.block_size
+            if isinstance(bs, int):
+                block_shape = tuple(max(1, min(bs, s)) for s in shape)
+            else:
+                block_shape = tuple(
+                    max(1, min(b, s)) for b, s in zip(bs, shape)
+                )
+        # grid-aware process grid: assign process factors to the dims with
+        # the most blocks (a [n,1] vector gets pgrid (p,1), not (√p,√p))
+        grid = [max(1, -(-s // b)) for s, b in zip(shape, block_shape)]
+        pgrid = [1] * nd
+        n = self.nprocs
+        factors = []
+        f = 2
+        while f * f <= n:
+            while n % f == 0:
+                factors.append(f)
+                n //= f
+            f += 1
+        if n > 1:
+            factors.append(n)
+        if nd:
+            for f in sorted(factors, reverse=True):
+                i = max(range(nd), key=lambda d: grid[d] / pgrid[d])
+                pgrid[i] *= f
+        return Layout(tuple(shape), tuple(block_shape), tuple(pgrid))
+
+    def new_base(self, shape, dtype, block_shape=None) -> ArrayBase:
+        base = ArrayBase(shape, dtype, self._make_layout(shape, block_shape))
+        self._live_bases[base.id] = True
+        weakref.finalize(base, self._dead_bases.add, base.id)
+        return base
+
+    def scatter(self, base: ArrayBase, data: np.ndarray) -> None:
+        """Distribute host data into base-blocks (eager, creation time)."""
+        data = np.asarray(data, dtype=base.dtype).reshape(base.shape)
+        for coord, sl in base.layout.blocks():
+            self.storage[(base.id, coord)] = np.array(data[sl], copy=True)
+
+    def fill_base(self, base: ArrayBase, value) -> None:
+        for coord, _ in base.layout.blocks():
+            self.storage[(base.id, coord)] = np.full(
+                base.layout.block_shape_at(coord), value, dtype=base.dtype
+            )
+
+    def gather(self, base: ArrayBase, view: ViewSpec) -> np.ndarray:
+        """Read back a view (flushes first — §5.6 trigger 1)."""
+        self.flush()
+        out = np.empty(view.vshape, dtype=base.dtype)
+        spec = OperandSpec(view, base.layout, tuple(range(view.ndim)))
+        for vint, (frag,) in fragment_iteration_space(view.vshape, (spec,)):
+            dst = tuple(slice(lo, hi) for lo, hi in vint)
+            out[dst] = self.storage[(base.id, frag.block)][frag.slices]
+        return out
+
+    # -- recording ------------------------------------------------------------
+    def _write_version(self, base_id: int, coord: tuple) -> int:
+        return self._write_epoch.get((base_id, coord), 0)
+
+    def _bump_write(self, base_id: int, coord: tuple) -> None:
+        k = (base_id, coord)
+        self._write_epoch[k] = self._write_epoch.get(k, 0) + 1
+
+    def _transfer(self, base: ArrayBase, frag: Fragment, dst_proc: int) -> int:
+        """Record (dedup'd) communication of one sub-view-block to
+        ``dst_proc``; returns the scratch id the data will land in."""
+        key = (
+            base.id,
+            frag.block,
+            frag.local,
+            dst_proc,
+            self._write_version(base.id, frag.block),
+        )
+        sid = self._xfer_cache.get(key)
+        if sid is not None:
+            return sid
+        sid = next(_scratch_ids)
+        self._xfer_cache[key] = sid
+        nbytes = frag.size * base.dtype.itemsize
+        op = OperationNode(
+            COMM,
+            TransferPayload(("b", base.id, frag), sid),
+            procs=(frag.owner, dst_proc),
+            nbytes=nbytes,
+            label=f"xfer b{base.id}{frag.block}->p{dst_proc}",
+        )
+        op.add_access(AccessNode((base.id, frag.block), frag.region, write=False))
+        op.add_access(AccessNode(("s", sid), None, write=True))
+        self.deps.insert(op)
+        return sid
+
+    def _transfer_scratch(self, sid_src: int, nbytes: int, src: int, dst: int) -> int:
+        sid = next(_scratch_ids)
+        op = OperationNode(
+            COMM,
+            TransferPayload(("s", sid_src), sid),
+            procs=(src, dst),
+            nbytes=nbytes,
+            label=f"xfer s{sid_src}->p{dst}",
+        )
+        op.add_access(AccessNode(("s", sid_src), None, write=False))
+        op.add_access(AccessNode(("s", sid), None, write=True))
+        self.deps.insert(op)
+        return sid
+
+    def _insert_compute(self, payload, out_base, out_frag, reads, cost, label=""):
+        op = OperationNode(
+            COMPUTE, payload, procs=(out_frag.owner,), cost=cost, label=label
+        )
+        op.add_access(
+            AccessNode((out_base.id, out_frag.block), out_frag.region, write=True)
+        )
+        for ref in reads:
+            kind = ref[0]
+            if kind == "b":
+                _, bid, frag = ref
+                op.add_access(AccessNode((bid, frag.block), frag.region, write=False))
+            elif kind == "s":
+                op.add_access(AccessNode(("s", ref[1]), None, write=False))
+        self.deps.insert(op)
+        self._bump_write(out_base.id, out_frag.block)
+        self._recorded_since_flush += 1
+
+    def _maybe_flush(self) -> None:
+        if self._in_record == 0 and self._recorded_since_flush >= self.flush_threshold:
+            self.flush()  # §5.6 trigger 2: threshold
+
+    def record_map(
+        self,
+        ufunc: UFunc,
+        out,  # (ArrayBase, ViewSpec)
+        inputs: Sequence,  # list of (ArrayBase, ViewSpec) or ("c", scalar)
+    ) -> None:
+        """Record an elementwise ufunc over equally-shaped views (with
+        numpy-style length-1 broadcasting)."""
+        self._in_record += 1
+        try:
+            self._record_map(ufunc, out, inputs)
+        finally:
+            self._in_record -= 1
+        self._maybe_flush()
+
+    def _record_map(self, ufunc, out, inputs) -> None:
+        out_base, out_view = out
+        nd = out_view.ndim
+        dims = tuple(range(nd))
+        specs = [OperandSpec(out_view, out_base.layout, dims)]
+        arr_inputs = []
+        for inp in inputs:
+            if isinstance(inp, tuple) and inp and inp[0] == "c":
+                arr_inputs.append(None)
+            else:
+                b, v = inp
+                specs.append(OperandSpec(v, b.layout, dims))
+                arr_inputs.append((b, v))
+        frags_all = fragment_iteration_space(out_view.vshape, specs)
+        for vint, frags in frags_all:
+            out_frag = frags[0]
+            dst = out_frag.owner
+            args = []
+            reads = []
+            fi = 1
+            for inp, orig in zip(arr_inputs, inputs):
+                if inp is None:
+                    args.append(("c", orig[1]))
+                    continue
+                b, _ = inp
+                frag = frags[fi]
+                fi += 1
+                if frag.owner != dst:
+                    sid = self._transfer(b, frag, dst)
+                    ref = ("s", sid)
+                else:
+                    ref = ("b", b.id, frag)
+                args.append(ref)
+                reads.append(ref)
+            size = out_frag.size
+            payload = MapPayload(ufunc, out_base.id, out_frag, tuple(args), out_base.dtype)
+            cost = size * ufunc.cost * self.cluster.elem_time
+            self._insert_compute(
+                payload, out_base, out_frag, reads, cost, label=f"map:{ufunc.name}"
+            )
+
+    def record_fill(self, out, value) -> None:
+        out_base, out_view = out
+        dims = tuple(range(out_view.ndim))
+        spec = OperandSpec(out_view, out_base.layout, dims)
+        for _, (frag,) in fragment_iteration_space(out_view.vshape, (spec,)):
+            payload = FillPayload(out_base.id, frag, value)
+            cost = frag.size * self.cluster.elem_time
+            self._insert_compute(payload, out_base, frag, (), cost, label="fill")
+        self._maybe_flush()
+
+    def record_reduce(
+        self, ufunc_name: str, out, inp, axes: tuple[int, ...], keepdims: bool = False
+    ) -> None:
+        """Record ``out = reduce(ufunc, inp, axes)``; ``out``'s dims are
+        ``inp``'s dims with ``axes`` removed (or kept as length-1 when
+        ``keepdims``)."""
+        self._in_record += 1
+        try:
+            self._record_reduce(ufunc_name, out, inp, axes, keepdims)
+        finally:
+            self._in_record -= 1
+        self._maybe_flush()
+
+    def _record_reduce(self, ufunc_name, out, inp, axes, keepdims) -> None:
+        in_base, in_view = inp
+        out_base, out_view = out
+        nd = in_view.ndim
+        kept = tuple(d for d in range(nd) if d not in axes)
+        out_dims = tuple(range(nd)) if keepdims else kept
+        specs = (
+            OperandSpec(in_view, in_base.layout, tuple(range(nd))),
+            OperandSpec(out_view, out_base.layout, out_dims),
+        )
+        for vint, (in_frag, out_frag) in fragment_iteration_space(
+            in_view.vshape, specs
+        ):
+            src_owner = in_frag.owner
+            dst_owner = out_frag.owner
+            # stage 1: partial reduce at the data's owner
+            sid = next(_scratch_ids)
+            p1 = ReducePartialPayload(
+                ufunc_name, ("b", in_base.id, in_frag), axes, sid, keepdims
+            )
+            op = OperationNode(
+                COMPUTE,
+                p1,
+                procs=(src_owner,),
+                cost=in_frag.size * self.cluster.elem_time,
+                label=f"reduce:{ufunc_name}",
+            )
+            op.add_access(
+                AccessNode((in_base.id, in_frag.block), in_frag.region, write=False)
+            )
+            op.add_access(AccessNode(("s", sid), None, write=True))
+            self.deps.insert(op)
+            # stage 2: ship the partial if needed
+            if src_owner != dst_owner:
+                nbytes = out_frag.size * out_base.dtype.itemsize
+                sid = self._transfer_scratch(sid, nbytes, src_owner, dst_owner)
+            # stage 3: combine into the output fragment
+            ckey = (out_base.id, out_frag.block, out_frag.region)
+            init = ckey not in self._combine_seen
+            self._combine_seen.add(ckey)
+            p3 = CombinePayload(ufunc_name, out_base.id, out_frag, sid, init)
+            self._insert_compute(
+                p3,
+                out_base,
+                out_frag,
+                (("s", sid),),
+                out_frag.size * self.cluster.elem_time,
+                label=f"combine:{ufunc_name}",
+            )
+
+    def record_matmul(self, out, a, b, trans_a=False, trans_b=False) -> None:
+        """Blocked matmul C[m,n] = Σ_k A[m,k]·B[k,n] (SUMMA-style: operand
+        blocks are communicated to the owner of the output block, dedup'd
+        per destination — paper §6.1.1)."""
+        self._in_record += 1
+        try:
+            self._record_matmul(out, a, b, trans_a, trans_b)
+        finally:
+            self._in_record -= 1
+        self._maybe_flush()
+
+    def _record_matmul(self, out, a, b, trans_a, trans_b) -> None:
+        out_base, out_view = out
+        a_base, a_view = a
+        b_base, b_view = b
+        M, N = out_view.vshape
+        K = a_view.vshape[0 if trans_a else 1]
+        a_dims = (2, 0) if trans_a else (0, 2)
+        b_dims = (1, 2) if trans_b else (2, 1)
+        specs = (
+            OperandSpec(out_view, out_base.layout, (0, 1)),
+            OperandSpec(a_view, a_base.layout, a_dims),
+            OperandSpec(b_view, b_base.layout, b_dims),
+        )
+        for vint, (c_frag, a_frag, b_frag) in fragment_iteration_space(
+            (M, N, K), specs
+        ):
+            dst = c_frag.owner
+            refs = []
+            for base, frag in ((a_base, a_frag), (b_base, b_frag)):
+                if frag.owner != dst:
+                    refs.append(("s", self._transfer(base, frag, dst)))
+                else:
+                    refs.append(("b", base.id, frag))
+            ckey = (out_base.id, c_frag.block, c_frag.region, "mm")
+            init = ckey not in self._combine_seen
+            self._combine_seen.add(ckey)
+            m, n = (vint[0][1] - vint[0][0]), (vint[1][1] - vint[1][0])
+            k = vint[2][1] - vint[2][0]
+            payload = MatmulPayload(
+                out_base.id, c_frag, refs[0], refs[1], trans_a, trans_b, init
+            )
+            cost = 2.0 * m * n * k * self.cluster.flop_time
+            self._insert_compute(
+                payload, out_base, c_frag, refs, cost, label="matmul"
+            )
+
+    # -- execution backend ------------------------------------------------
+    def _resolve(self, ref):
+        kind = ref[0]
+        if kind == "b":
+            _, bid, frag = ref
+            return self.storage[(bid, frag.block)][frag.slices]
+        if kind == "s":
+            return self.scratch[ref[1]]
+        return ref[1]  # constant
+
+    def _execute(self, op: OperationNode) -> None:
+        p = op.payload
+        if isinstance(p, TransferPayload):
+            # always materialize a copy: the wire transfer must snapshot the
+            # source at send time (an aliasing view would see later writes)
+            self.scratch[p.dst_scratch] = np.array(self._resolve(p.src), copy=True)
+        elif isinstance(p, MapPayload):
+            args = [self._resolve(r) for r in p.args]
+            res = p.ufunc(*args)
+            blk = self.storage[(p.out_base, p.out_frag.block)]
+            blk[p.out_frag.slices] = res
+        elif isinstance(p, ReducePartialPayload):
+            arr = self._resolve(p.src)
+            self.scratch[p.dst_scratch] = reduce_fn(p.ufunc_name)(
+                arr, axis=p.axes if p.axes else None, keepdims=p.keepdims
+            )
+        elif isinstance(p, CombinePayload):
+            part = self.scratch[p.src_scratch]
+            blk = self.storage[(p.out_base, p.out_frag.block)]
+            if p.init:
+                blk[p.out_frag.slices] = part
+            else:
+                cur = blk[p.out_frag.slices]
+                blk[p.out_frag.slices] = get_ufunc(p.ufunc_name)(cur, part)
+        elif isinstance(p, MatmulPayload):
+            a = self._resolve(p.a)
+            b = self._resolve(p.b)
+            if p.trans_a:
+                a = a.T
+            if p.trans_b:
+                b = b.T
+            val = a @ b
+            blk = self.storage[(p.out_base, p.out_frag.block)]
+            if p.init:
+                blk[p.out_frag.slices] = val
+            else:
+                blk[p.out_frag.slices] += val
+        elif isinstance(p, FillPayload):
+            blk = self.storage[(p.out_base, p.out_frag.block)]
+            blk[p.out_frag.slices] = p.value
+        else:  # pragma: no cover
+            raise TypeError(f"unknown payload {type(p)}")
+
+    # -- flush (§5.6/§5.7) ----------------------------------------------------
+    def flush(self) -> Optional[TimelineResult]:
+        if self.deps.n_pending == 0:
+            self._purge_dead()
+            return None
+        res = run_schedule(
+            self.deps,
+            self.cluster,
+            mode=self.mode,
+            executor=self._execute if self.execute else None,
+        )
+        self.result.merge(res)
+        self.flush_count += 1
+        self._recorded_since_flush = 0
+        self.scratch.clear()
+        self._xfer_cache.clear()
+        self._combine_seen.clear()
+        self._purge_dead()
+        return res
+
+    def _purge_dead(self) -> None:
+        if not self._dead_bases:
+            return
+        dead = self._dead_bases
+        for key in [k for k in self.storage if k[0] in dead]:
+            del self.storage[key]
+        for key in [k for k in self._write_epoch if k[0] in dead]:
+            del self._write_epoch[key]
+        for bid in dead:
+            self._live_bases.pop(bid, None)
+        self._dead_bases = set()
+
+    # -- reporting -------------------------------------------------------------
+    def stats(self) -> TimelineResult:
+        return self.result

@@ -1,0 +1,17 @@
+"""Ufunc fusion (paper §7 "future work", implemented — beyond-paper).
+
+When ``Runtime(fusion=True)``, elementwise operator applications build
+:class:`~repro.core.darray.Expr` trees instead of materializing a
+temporary per ufunc; at materialization the whole tree is recorded as ONE
+joint operation.  Benefits, measured in ``benchmarks/paper_apps.py``:
+
+* fewer operation-nodes → lower dependency-system overhead (the paper's
+  dominating cost for the full-DAG variant);
+* no intermediate temporaries → less memory traffic (on TPU: the analogue
+  of keeping the chain in VMEM instead of HBM round-trips per ufunc);
+* higher per-fragment arithmetic intensity → more computation available to
+  hide each transfer behind (directly improves the §5.4 overlap window).
+"""
+from .darray import Expr  # noqa: F401
+
+__all__ = ["Expr"]

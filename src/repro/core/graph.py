@@ -1,0 +1,219 @@
+"""Dependency system (paper §5.7).
+
+Two interchangeable implementations:
+
+* :class:`DependencySystem` — the paper's §5.7.2 heuristic: one ordered
+  *dependency-list* of access-nodes per base-block, a reference counter per
+  operation-node, and an O(1) ready queue.  Insertion of an operation only
+  scans the lists of the blocks it touches.
+* :class:`FullDAG` — the §5.7 straw-man that compares every new node against
+  every node in the graph (O(n) insert, O(n²) build).  Kept as a reference
+  oracle for tests and for the overhead benchmark that motivates the
+  heuristic.
+
+Conflict rule: two access-nodes conflict iff they touch the same base-block,
+at least one is a write, and their per-dimension index regions intersect.
+"""
+from __future__ import annotations
+
+import itertools
+from collections import deque
+from dataclasses import dataclass, field
+from typing import Callable, Hashable, Iterable, Optional
+
+from .blocks import Region
+
+__all__ = ["AccessNode", "OperationNode", "DependencySystem", "FullDAG"]
+
+_op_counter = itertools.count()
+
+# Operation kinds.  COMM nodes are prioritized by the scheduler (§5.7
+# invariant 2/3); COMPUTE nodes are everything else.
+COMM = "comm"
+COMPUTE = "compute"
+
+
+@dataclass
+class AccessNode:
+    """Memory access to one sub-view-block (paper fig. 7)."""
+
+    key: Hashable  # (base_id, block_coord) — identifies the dependency list
+    region: Optional[Region]  # None = whole block
+    write: bool
+    op: "OperationNode" = field(repr=False, default=None)
+    # access-nodes that were inserted *later* and conflict with this one;
+    # their ops get a refcount decrement when this access is removed.
+    dependents: list["AccessNode"] = field(default_factory=list, repr=False)
+    removed: bool = False
+
+    def conflicts(self, other: "AccessNode") -> bool:
+        if not (self.write or other.write):
+            return False
+        if self.region is None or other.region is None:
+            return True
+        for (a0, a1), (b0, b1) in zip(self.region, other.region):
+            if a1 <= b0 or b1 <= a0:
+                return False
+        return True
+
+
+@dataclass
+class OperationNode:
+    """A schedulable operation over a set of sub-view-blocks (paper fig. 7).
+
+    ``kind`` is COMM for data transfers and COMPUTE for local work; the
+    scheduler's priority rule keys on it.  ``payload`` carries whatever the
+    execution backend needs (ufunc + fragments, transfer descriptor, ...).
+    ``procs`` is the set of participating process ranks; ``cost`` a model
+    duration in seconds for the timeline simulator; ``bytes`` the transfer
+    size for comm nodes.
+    """
+
+    kind: str
+    payload: object
+    procs: tuple[int, ...]
+    cost: float = 0.0
+    nbytes: int = 0
+    label: str = ""
+    uid: int = field(default_factory=lambda: next(_op_counter))
+    accesses: list[AccessNode] = field(default_factory=list, repr=False)
+    refcount: int = 0
+    executed: bool = False
+
+    def add_access(self, acc: AccessNode) -> None:
+        acc.op = self
+        self.accesses.append(acc)
+
+
+class DependencySystem:
+    """Paper §5.7.2: per-base-block dependency lists + ready queue."""
+
+    def __init__(self) -> None:
+        # key -> list of live access-nodes, in insertion (program) order.
+        self._lists: dict[Hashable, list[AccessNode]] = {}
+        self.ready: deque[OperationNode] = deque()
+        self.n_ops = 0
+        self.n_pending = 0
+        # instrumentation for the overhead benchmark
+        self.scan_steps = 0
+
+    # -- recording -------------------------------------------------------
+    def insert(self, op: OperationNode) -> None:
+        """Record ``op``: insert each access into its block's dependency
+        list, accumulating the refcount from conflicting earlier accesses."""
+        refs = 0
+        for acc in op.accesses:
+            lst = self._lists.setdefault(acc.key, [])
+            for prev in lst:
+                self.scan_steps += 1
+                if not prev.removed and prev.op is not op and prev.conflicts(acc):
+                    prev.dependents.append(acc)
+                    refs += 1
+            lst.append(acc)
+        op.refcount = refs
+        self.n_ops += 1
+        self.n_pending += 1
+        if refs == 0:
+            self.ready.append(op)
+
+    # -- execution bookkeeping -------------------------------------------
+    def complete(self, op: OperationNode) -> list[OperationNode]:
+        """Remove ``op``'s access-nodes (paper: only on execution are
+        access-nodes removed) and return newly-ready operations."""
+        assert not op.executed
+        op.executed = True
+        self.n_pending -= 1
+        newly = []
+        for acc in op.accesses:
+            acc.removed = True
+            for dep in acc.dependents:
+                dep.op.refcount -= 1
+                if dep.op.refcount == 0:
+                    newly.append(dep.op)
+                    self.ready.append(dep.op)
+            acc.dependents.clear()
+        # lazy compaction of dependency lists
+        for acc in op.accesses:
+            lst = self._lists.get(acc.key)
+            if lst is not None and len(lst) > 32 and sum(a.removed for a in lst) > len(lst) // 2:
+                self._lists[acc.key] = [a for a in lst if not a.removed]
+        return newly
+
+    def pop_ready(self, kind: Optional[str] = None) -> Optional[OperationNode]:
+        """Pop a ready op, optionally restricted to ``kind`` (comm-first
+        priority is implemented by asking for COMM first)."""
+        if kind is None:
+            return self.ready.popleft() if self.ready else None
+        for i, op in enumerate(self.ready):
+            if op.kind == kind:
+                del self.ready[i]
+                return op
+        return None
+
+    def ready_of_kind(self, kind: str) -> list[OperationNode]:
+        return [op for op in self.ready if op.kind == kind]
+
+    @property
+    def done(self) -> bool:
+        return self.n_pending == 0
+
+
+class FullDAG:
+    """Paper §5.7 baseline: O(n) insertion against every live node."""
+
+    def __init__(self) -> None:
+        self.nodes: list[OperationNode] = []
+        self.edges: dict[int, list[OperationNode]] = {}
+        self.ready: deque[OperationNode] = deque()
+        self.n_pending = 0
+        self.scan_steps = 0
+
+    def insert(self, op: OperationNode) -> None:
+        refs = 0
+        for prev in self.nodes:
+            if prev.executed:
+                continue
+            dep = False
+            for pa in prev.accesses:
+                for na in op.accesses:
+                    self.scan_steps += 1
+                    if pa.key == na.key and pa.conflicts(na):
+                        dep = True
+                        break
+                if dep:
+                    break
+            if dep:
+                self.edges.setdefault(prev.uid, []).append(op)
+                refs += 1
+        op.refcount = refs
+        self.nodes.append(op)
+        self.n_pending += 1
+        if refs == 0:
+            self.ready.append(op)
+
+    def complete(self, op: OperationNode) -> list[OperationNode]:
+        op.executed = True
+        self.n_pending -= 1
+        newly = []
+        for succ in self.edges.pop(op.uid, []):
+            succ.refcount -= 1
+            if succ.refcount == 0:
+                newly.append(succ)
+                self.ready.append(succ)
+        return newly
+
+    def pop_ready(self, kind: Optional[str] = None) -> Optional[OperationNode]:
+        if kind is None:
+            return self.ready.popleft() if self.ready else None
+        for i, op in enumerate(self.ready):
+            if op.kind == kind:
+                del self.ready[i]
+                return op
+        return None
+
+    def ready_of_kind(self, kind: str) -> list[OperationNode]:
+        return [op for op in self.ready if op.kind == kind]
+
+    @property
+    def done(self) -> bool:
+        return self.n_pending == 0

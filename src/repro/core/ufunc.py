@@ -1,0 +1,72 @@
+"""Universal-function registry (paper §5.3).
+
+A ufunc is a vectorized scalar function applied independently to every
+element of the involved array-views; the engine translates a ufunc
+application into per-sub-view-block operations.  ``cost`` is the relative
+per-element compute weight used by the timeline model (memory-bound ufuncs
+≈ 1, transcendentals higher — calibrated against NumPy throughput ratios).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable
+
+import numpy as np
+
+__all__ = ["UFunc", "UFUNCS", "get_ufunc"]
+
+
+@dataclass(frozen=True)
+class UFunc:
+    name: str
+    fn: Callable
+    nin: int
+    cost: float = 1.0  # relative per-element cost vs. a copy
+    reduceable: bool = False
+
+    def __call__(self, *args):
+        return self.fn(*args)
+
+
+UFUNCS: dict[str, UFunc] = {}
+
+
+def _reg(name, fn, nin, cost=1.0, reduceable=False):
+    uf = UFunc(name, fn, nin, cost, reduceable)
+    UFUNCS[name] = uf
+    return uf
+
+
+identity = _reg("identity", lambda x: x, 1, 1.0)
+add = _reg("add", np.add, 2, 1.0, reduceable=True)
+subtract = _reg("subtract", np.subtract, 2, 1.0)
+multiply = _reg("multiply", np.multiply, 2, 1.0, reduceable=True)
+divide = _reg("divide", np.divide, 2, 2.0)
+power = _reg("power", np.power, 2, 8.0)
+negative = _reg("negative", np.negative, 1, 1.0)
+absolute = _reg("absolute", np.absolute, 1, 1.0)
+exp = _reg("exp", np.exp, 1, 4.0)
+log = _reg("log", np.log, 1, 4.0)
+sqrt = _reg("sqrt", np.sqrt, 1, 2.0)
+square = _reg("square", np.square, 1, 1.0)
+maximum = _reg("maximum", np.maximum, 2, 1.0, reduceable=True)
+minimum = _reg("minimum", np.minimum, 2, 1.0, reduceable=True)
+greater = _reg("greater", lambda a, b: np.greater(a, b).astype(np.float64), 2, 1.0)
+less = _reg("less", lambda a, b: np.less(a, b).astype(np.float64), 2, 1.0)
+where = _reg("where", np.where, 3, 1.0)
+
+_REDUCE_INIT = {"add": 0.0, "multiply": 1.0, "maximum": -np.inf, "minimum": np.inf}
+_REDUCE_NP = {
+    "add": np.add.reduce,
+    "multiply": np.multiply.reduce,
+    "maximum": np.maximum.reduce,
+    "minimum": np.minimum.reduce,
+}
+
+
+def get_ufunc(name: str) -> UFunc:
+    return UFUNCS[name]
+
+
+def reduce_fn(name: str):
+    return _REDUCE_NP[name]

@@ -1,0 +1,43 @@
+"""Pure-jnp oracle for the flash-attention kernel.
+
+Materializes the full S×S score matrix — O(S²) memory, fine at test
+sizes, bit-accurate softmax in f32.
+"""
+from __future__ import annotations
+
+from typing import Optional
+
+import jax.numpy as jnp
+
+NEG_INF = -1e30
+
+
+def flash_attention_ref(
+    q,  # [B, Sq, H, d]
+    k,  # [B, Sk, KV, d]
+    v,  # [B, Sk, KV, d]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    scale: Optional[float] = None,
+):
+    B, Sq, H, d = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    G = H // KV
+    scale = d ** -0.5 if scale is None else scale
+    qf = q.reshape(B, Sq, KV, G, d).astype(jnp.float32) * scale
+    kf = k.astype(jnp.float32)
+    vf = v.astype(jnp.float32)
+    s = jnp.einsum("bqkgd,bskd->bkgqs", qf, kf)  # [B, KV, G, Sq, Sk]
+    q_pos = jnp.arange(Sq)[:, None]
+    k_pos = jnp.arange(Sk)[None, :]
+    ok = jnp.ones((Sq, Sk), bool)
+    if causal:
+        ok = ok & (q_pos >= k_pos)
+    if window is not None:
+        ok = ok & (q_pos - k_pos < window)
+    s = jnp.where(ok[None, None, None], s, NEG_INF)
+    p = jnp.exp(s - s.max(-1, keepdims=True))
+    p = p / jnp.maximum(p.sum(-1, keepdims=True), 1e-30)
+    o = jnp.einsum("bkgqs,bskd->bkgqd", p, vf)
+    return o.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, d).astype(q.dtype)

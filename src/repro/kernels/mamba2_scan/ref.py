@@ -1,0 +1,35 @@
+"""Pure-jnp oracle for the SSD scan kernel: the naive per-token
+recurrence (exact, O(S) sequential)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def ssd_scan_ref(x, dt, A, B, C, *, init_state=None):
+    """x: [b,s,h,p]; dt: [b,s,h] (>0); A: [h] (<0); B,C: [b,s,n].
+    Returns (y [b,s,h,p], final_state [b,h,p,n])."""
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    state = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(state, inp):
+        x_t, dt_t, B_t, C_t = inp  # [b,h,p], [b,h], [b,n], [b,n]
+        dA = jnp.exp(dt_t * A)  # [b,h]
+        dBx = jnp.einsum("bn,bh,bhp->bhpn", B_t, dt_t, x_t)
+        state = state * dA[..., None, None] + dBx
+        y = jnp.einsum("bhpn,bn->bhp", state, C_t)
+        return state, y
+
+    xs = (
+        x.transpose(1, 0, 2, 3).astype(jnp.float32),
+        dt.transpose(1, 0, 2).astype(jnp.float32),
+        B.transpose(1, 0, 2).astype(jnp.float32),
+        C.transpose(1, 0, 2).astype(jnp.float32),
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(x.dtype), state

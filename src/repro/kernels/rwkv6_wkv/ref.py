@@ -1,0 +1,33 @@
+"""Pure-jnp oracle for the RWKV6 wkv kernel: exact per-token recurrence.
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+
+def wkv6_ref(r, k, v, w, u, *, init_state=None):
+    """r,k,v,w: [B,T,H,N] (w = decay ∈ (0,1)); u: [H,N].
+    Returns (y [B,T,H,N], final_state [B,H,N,N])."""
+    B, T, H, N = r.shape
+    state = (
+        jnp.zeros((B, H, N, N), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def step(state, inp):
+        r_t, k_t, v_t, w_t = inp  # each [B,H,N]
+        kv = jnp.einsum("bhn,bhm->bhnm", k_t, v_t)
+        y = jnp.einsum("bhn,bhnm->bhm", r_t, state + u[None, :, :, None] * kv)
+        state = state * w_t[..., None] + kv
+        return state, y
+
+    xs = tuple(
+        a.transpose(1, 0, 2, 3).astype(jnp.float32) for a in (r, k, v, w)
+    )
+    state, ys = jax.lax.scan(step, state, xs)
+    return ys.transpose(1, 0, 2, 3).astype(r.dtype), state

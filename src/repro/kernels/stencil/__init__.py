@@ -1,0 +1,4 @@
+from .ops import jacobi_sweep
+from .ref import jacobi_sweep_ref
+
+__all__ = ["jacobi_sweep", "jacobi_sweep_ref"]

@@ -1,0 +1,30 @@
+"""jit'd public wrapper for the fused Jacobi-sweep kernel."""
+from __future__ import annotations
+
+import functools
+
+import jax
+import jax.numpy as jnp
+
+from .kernel import jacobi_sweep_kernel
+
+
+@functools.partial(jax.jit, static_argnames=("band", "interpret"))
+def jacobi_sweep(x: jax.Array, *, band: int = 128, interpret: bool = True):
+    """One fused 5-point Jacobi sweep on [H, W] (Dirichlet boundary)."""
+    H, W = x.shape
+    band = min(band, H)
+    pad = (-H) % band
+    if pad:
+        # edge-replicate padding: padded rows never influence real rows
+        # (they sit "below" the fixed bottom boundary row)
+        x = jnp.concatenate([x, jnp.repeat(x[-1:], pad, axis=0)], axis=0)
+    # the kernel pins global row H_padded-1; real boundary row is H-1 —
+    # handled because padded rows replicate the real last row, and we
+    # restore the original rows on return.
+    out = jacobi_sweep_kernel(x, band=band, interpret=interpret)
+    out = out[:H]
+    if pad:
+        # re-pin the true last row (it was treated as interior above)
+        out = out.at[H - 1].set(x[H - 1])
+    return out

@@ -1,0 +1,1 @@
+"""repro.launch — meshes, sharding rules, train/serve steps, dry-run."""

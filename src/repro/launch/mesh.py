@@ -1,0 +1,34 @@
+"""Production meshes.
+
+``make_production_mesh`` is a FUNCTION (importing this module never
+touches jax device state).  Single-pod: 16×16 = 256 chips, axes
+("data", "model").  Multi-pod: 2×16×16 = 512 chips, axes
+("pod", "data", "model") — the "pod" axis crosses DCI.
+"""
+from __future__ import annotations
+
+import jax
+
+__all__ = ["make_production_mesh", "fsdp_axes", "dp_axes", "MESH_AXES"]
+
+MESH_AXES = {
+    False: (("data", "model"), (16, 16)),
+    True: (("pod", "data", "model"), (2, 16, 16)),
+}
+
+
+def make_production_mesh(*, multi_pod: bool = False):
+    shape = (2, 16, 16) if multi_pod else (16, 16)
+    axes = ("pod", "data", "model") if multi_pod else ("data", "model")
+    return jax.make_mesh(shape, axes)
+
+
+def fsdp_axes(mesh) -> tuple[str, ...]:
+    """Axes parameters are FSDP-sharded over (pod+data when present)."""
+    names = mesh.axis_names
+    return tuple(a for a in ("pod", "data") if a in names)
+
+
+def dp_axes(mesh) -> tuple[str, ...]:
+    """Axes the batch dimension is sharded over."""
+    return fsdp_axes(mesh)

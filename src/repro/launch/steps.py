@@ -1,0 +1,213 @@
+"""Step builders: train_step / prefill_step / serve_step per (arch × shape).
+
+``cell()`` returns everything the dry-run and the real drivers need:
+the step function, ShapeDtypeStruct arguments, and in/out shardings.
+"""
+from __future__ import annotations
+
+import functools
+from dataclasses import dataclass
+from typing import Any, Callable, Optional
+
+import jax
+import jax.numpy as jnp
+from jax.sharding import Mesh, PartitionSpec as P
+
+from repro.configs import SHAPES, get_config
+from repro.configs.base import ModelConfig, ShapeSpec
+from repro.data.pipeline import make_batch_specs
+from repro.models import (
+    decode_step,
+    forward,
+    init_params,
+    loss_fn,
+    make_decode_state,
+    prefill,
+)
+from repro.optim import AdamW
+
+from .sharding import batch_specs, param_specs, shardings, state_specs
+
+__all__ = ["cell", "Cell", "make_train_step", "make_serve_step", "make_prefill_step",
+           "cell_config", "skip_reason"]
+
+# archs whose attention is quadratic-full → long_500k is skipped
+_FULL_ATTN_SKIP = {
+    "whisper-small",
+    "yi-34b",
+    "mistral-large-123b",
+    "granite-3-8b",
+    "internvl2-2b",
+    "grok-1-314b",
+    "deepseek-v2-lite-16b",
+}
+
+
+def skip_reason(arch_id: str, shape_name: str) -> Optional[str]:
+    if shape_name == "long_500k" and arch_id in _FULL_ATTN_SKIP:
+        return "full quadratic attention — 524k decode is not sub-quadratic (DESIGN.md §Arch-applicability)"
+    return None
+
+
+def cell_config(arch_id: str, shape_name: str, **overrides) -> ModelConfig:
+    """Shape-specialized config (e.g. zamba2 long-context window)."""
+    cfg = get_config(arch_id)
+    shape = SHAPES[shape_name]
+    kw: dict[str, Any] = {}
+    if shape_name == "long_500k" and cfg.family == "hybrid":
+        # zamba2's shared attention runs a sliding window at 500k
+        kw["swa_window"] = 4096
+    if shape.kind != "train":
+        kw["remat"] = False
+        kw["microbatches"] = 1
+    kw.update(overrides)
+    return cfg.replace(**kw) if kw else cfg
+
+
+# ---------------------------------------------------------------------------
+# step functions
+# ---------------------------------------------------------------------------
+
+
+def make_optimizer(cfg) -> AdamW:
+    return AdamW(lr=3e-4, moment_dtype=cfg.opt_state_dtype)
+
+
+def make_train_step(cfg, optimizer: Optional[AdamW] = None) -> Callable:
+    opt = optimizer or make_optimizer(cfg)
+
+    def train_step(params, opt_state, batch):
+        mb = cfg.microbatches
+        if mb <= 1:
+            (loss, metrics), grads = jax.value_and_grad(
+                lambda p: loss_fn(cfg, p, batch), has_aux=True
+            )(params)
+        else:
+            def split(x):
+                return x.reshape(mb, x.shape[0] // mb, *x.shape[1:])
+
+            mbatches = jax.tree.map(split, batch)
+            zero = jax.tree.map(
+                lambda p: jnp.zeros(p.shape, jnp.float32), params
+            )
+
+            def acc(carry, mbatch):
+                g_acc, l_acc = carry
+                (l, _), g = jax.value_and_grad(
+                    lambda p: loss_fn(cfg, p, mbatch), has_aux=True
+                )(params)
+                g_acc = jax.tree.map(
+                    lambda a, b: a + b.astype(jnp.float32), g_acc, g
+                )
+                return (g_acc, l_acc + l), None
+
+            (grads, loss_sum), _ = jax.lax.scan(acc, (zero, 0.0), mbatches)
+            grads = jax.tree.map(lambda g: g / mb, grads)
+            loss = loss_sum / mb
+            metrics = {}
+        new_params, new_opt, opt_metrics = opt.update(grads, opt_state, params)
+        return new_params, new_opt, {"loss": loss, **opt_metrics}
+
+    return train_step
+
+
+def make_prefill_step(cfg, shape: ShapeSpec) -> Callable:
+    def prefill_step(params, batch):
+        return prefill(cfg, params, batch, max_len=shape.seq_len)
+
+    return prefill_step
+
+
+def make_serve_step(cfg) -> Callable:
+    def serve_step(params, state, tokens):
+        logits, new_state = decode_step(cfg, params, tokens, state)
+        next_tokens = jnp.argmax(logits, axis=-1).astype(jnp.int32)
+        return next_tokens, new_state
+
+    return serve_step
+
+
+# ---------------------------------------------------------------------------
+# cell assembly (fn + arg specs + shardings)
+# ---------------------------------------------------------------------------
+
+
+@dataclass
+class Cell:
+    arch_id: str
+    shape: ShapeSpec
+    cfg: ModelConfig
+    fn: Callable
+    args: tuple  # ShapeDtypeStructs
+    in_shardings: tuple
+    out_shardings: Any
+    kind: str
+
+
+def _param_shapes(cfg):
+    return jax.eval_shape(lambda: init_params(cfg, jax.random.PRNGKey(0)))
+
+
+def cell(arch_id: str, shape_name: str, mesh: Mesh, **cfg_overrides) -> Cell:
+    """Build the lowering cell for (arch × shape) on ``mesh``."""
+    cfg = cell_config(arch_id, shape_name, **cfg_overrides)
+    shape = SHAPES[shape_name]
+    p_shapes = _param_shapes(cfg)
+    p_spec = param_specs(p_shapes, mesh)
+    seq_sharded = shape.global_batch == 1
+
+    if shape.kind == "train":
+        opt = make_optimizer(cfg)
+        o_shapes = jax.eval_shape(opt.init, p_shapes)
+        o_spec = param_specs_like(o_shapes, p_spec)
+        b_shapes = make_batch_specs(cfg, shape)
+        b_spec = batch_specs(b_shapes, mesh, seq_sharded=seq_sharded)
+        fn = make_train_step(cfg, opt)
+        return Cell(
+            arch_id, shape, cfg, fn,
+            (p_shapes, o_shapes, b_shapes),
+            (p_spec, o_spec, b_spec),
+            (p_spec, o_spec, P()),
+            "train",
+        )
+
+    if shape.kind == "prefill":
+        b_shapes = make_batch_specs(cfg, shape)
+        b_spec = batch_specs(b_shapes, mesh, seq_sharded=seq_sharded)
+        st_shapes = jax.eval_shape(
+            lambda: make_decode_state(cfg, shape.global_batch, shape.seq_len)
+        )
+        st_spec = state_specs(st_shapes, mesh)
+        fn = make_prefill_step(cfg, shape)
+        return Cell(
+            arch_id, shape, cfg, fn,
+            (p_shapes, b_shapes),
+            (p_spec, b_spec),
+            (P(), st_spec),
+            "prefill",
+        )
+
+    # decode: one token against a seq_len-deep cache
+    st_shapes = jax.eval_shape(
+        lambda: make_decode_state(
+            cfg, shape.global_batch, shape.seq_len,
+            start_pos=jnp.full((shape.global_batch,), shape.seq_len - 1, jnp.int32),
+        )
+    )
+    st_spec = state_specs(st_shapes, mesh)
+    t_shapes = jax.ShapeDtypeStruct((shape.global_batch,), jnp.int32)
+    t_spec = batch_specs(t_shapes, mesh)
+    fn = make_serve_step(cfg)
+    return Cell(
+        arch_id, shape, cfg, fn,
+        (p_shapes, st_shapes, t_shapes),
+        (p_spec, st_spec, t_spec),
+        (t_spec, st_spec),
+        "decode",
+    )
+
+
+def param_specs_like(opt_shapes, p_spec):
+    """Optimizer state inherits each param's spec (moments are
+    shape-congruent); the step scalar is replicated."""
+    return type(opt_shapes)(P(), p_spec, p_spec)

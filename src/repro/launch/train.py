@@ -1,0 +1,108 @@
+"""Training driver: data pipeline → train_step → checkpoints, under the
+fault-tolerance supervisor.
+
+    PYTHONPATH=src python -m repro.launch.train --arch granite-3-8b \
+        --reduced --steps 200 --ckpt-dir /tmp/ckpt
+
+On this CPU container use ``--reduced`` (the full configs are exercised
+via the dry-run).  On a pod the same driver runs per host with
+``jax.distributed.initialize()`` and the production mesh.
+"""
+from __future__ import annotations
+
+import argparse
+import time
+from pathlib import Path
+
+import jax
+import jax.numpy as jnp
+
+from repro.checkpoint import CheckpointManager
+from repro.configs import get_config, get_reduced
+from repro.data.pipeline import DataConfig, TokenPipeline
+from repro.models import init_params
+from repro.optim import AdamW, linear_warmup_cosine
+
+from .steps import make_train_step
+
+
+def train(
+    arch: str,
+    *,
+    reduced: bool = True,
+    steps: int = 200,
+    seq_len: int = 128,
+    global_batch: int = 8,
+    ckpt_dir: str | None = None,
+    ckpt_every: int = 50,
+    lr: float = 1e-3,
+    log_every: int = 10,
+    resume: bool = False,
+):
+    cfg = get_reduced(arch) if reduced else get_config(arch)
+    cfg = cfg.replace(microbatches=1)
+    params = init_params(cfg, jax.random.PRNGKey(0))
+    n_params = sum(x.size for x in jax.tree.leaves(params))
+    print(f"[train] {arch} reduced={reduced} params={n_params/1e6:.1f}M")
+
+    opt = AdamW(
+        lr=linear_warmup_cosine(lr, warmup=max(1, steps // 20), total_steps=steps),
+        moment_dtype=cfg.opt_state_dtype,
+    )
+    opt_state = opt.init(params)
+    step_fn = jax.jit(make_train_step(cfg, opt))
+
+    pipe = TokenPipeline(
+        DataConfig(vocab_size=cfg.vocab_size, seq_len=seq_len, global_batch=global_batch)
+    )
+    mgr = CheckpointManager(ckpt_dir, keep=3) if ckpt_dir else None
+    start = 0
+    if mgr and resume and mgr.latest_step() is not None:
+        (params, opt_state), start = mgr.restore((params, opt_state))
+        print(f"[train] resumed from step {start}")
+
+    t0 = time.time()
+    losses = []
+    extra = {}
+    for step in range(start, steps):
+        b = pipe.batch_at(step)
+        batch = {k: jnp.asarray(v) for k, v in b.items()}
+        if cfg.enc_dec:
+            batch["enc_frames"] = jnp.zeros((global_batch, cfg.enc_seq, cfg.d_model), cfg.jdtype)
+        if cfg.n_img_tokens:
+            batch["img_emb"] = jnp.zeros((global_batch, cfg.n_img_tokens, cfg.d_model), cfg.jdtype)
+        params, opt_state, metrics = step_fn(params, opt_state, batch)
+        losses.append(float(metrics["loss"]))
+        if step % log_every == 0 or step == steps - 1:
+            dt = time.time() - t0
+            tps = (step - start + 1) * global_batch * seq_len / max(dt, 1e-9)
+            print(f"  step {step:5d} loss {losses[-1]:.4f} "
+                  f"gnorm {float(metrics['grad_norm']):.2f} tok/s {tps:,.0f}")
+        if mgr and (step + 1) % ckpt_every == 0:
+            mgr.save(step + 1, (params, opt_state))  # async
+    if mgr:
+        mgr.save(steps, (params, opt_state), blocking=True)
+    print(f"[train] done: loss {losses[0]:.3f} → {losses[-1]:.3f} "
+          f"({time.time()-t0:.0f}s)")
+    return losses
+
+
+def main():
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--arch", required=True)
+    ap.add_argument("--reduced", action="store_true")
+    ap.add_argument("--steps", type=int, default=200)
+    ap.add_argument("--seq-len", type=int, default=128)
+    ap.add_argument("--global-batch", type=int, default=8)
+    ap.add_argument("--ckpt-dir", default=None)
+    ap.add_argument("--ckpt-every", type=int, default=50)
+    ap.add_argument("--lr", type=float, default=1e-3)
+    ap.add_argument("--resume", action="store_true")
+    a = ap.parse_args()
+    train(a.arch, reduced=a.reduced, steps=a.steps, seq_len=a.seq_len,
+          global_batch=a.global_batch, ckpt_dir=a.ckpt_dir,
+          ckpt_every=a.ckpt_every, lr=a.lr, resume=a.resume)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,26 @@
+"""repro.models — the LM substrate every assigned architecture runs on.
+
+Pure-functional JAX: parameters are pytrees of ``jnp`` arrays built by
+``init_params(cfg, key)``; the forward passes are plain functions of
+``(cfg, params, inputs)``.  Distribution is applied from the outside by
+``repro.launch.sharding`` (pjit in_shardings over the param tree) — the
+model code itself is single-program and mesh-agnostic, except where it
+deliberately calls the paper's overlapped collectives.
+"""
+from .model import (
+    decode_step,
+    init_params,
+    loss_fn,
+    make_decode_state,
+    prefill,
+    forward,
+)
+
+__all__ = [
+    "init_params",
+    "forward",
+    "loss_fn",
+    "prefill",
+    "decode_step",
+    "make_decode_state",
+]

@@ -1,0 +1,282 @@
+"""Attention: GQA (+ sliding window) and MLA (DeepSeek latent), with
+KV caches for decode.
+
+The S×S score matrix is never materialized: ``chunked_attention`` runs an
+online-softmax over KV chunks (lax.scan), keeping live memory at
+O(S·chunk) — this is the jnp twin of the Pallas flash kernel in
+``repro.kernels.flash_attention`` and is the path used for dry-run
+lowering (Pallas targets real TPUs; XLA fuses this path on any backend).
+"""
+from __future__ import annotations
+
+import functools
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+from .layers import apply_rope, dense_init, linear
+
+__all__ = [
+    "attn_init",
+    "attention",
+    "chunked_attention",
+    "init_kv_cache",
+    "mla_init",
+    "mla_attention",
+    "init_mla_cache",
+]
+
+NEG_INF = -1e30
+
+
+# ---------------------------------------------------------------------------
+# core: online-softmax attention over KV chunks
+# ---------------------------------------------------------------------------
+
+def chunked_attention(
+    q: jax.Array,  # [B, Sq, H, hd]
+    k: jax.Array,  # [B, Sk, KV, hd]
+    v: jax.Array,  # [B, Sk, KV, hd]
+    *,
+    causal: bool = True,
+    window: Optional[int] = None,
+    q_offset=0,  # scalar or [B] — global position of q[0]
+    kv_len=None,  # scalar or [B] — #valid cache entries (None = Sk)
+    k_positions=None,  # [B, Sk] explicit global key positions (ring caches);
+    # overrides the linear arange — entries < 0 are masked out.
+    chunk: int = 1024,
+    scale: Optional[float] = None,
+    unroll: bool = False,
+) -> jax.Array:
+    B, Sq, H, hd = q.shape
+    Sk, KV = k.shape[1], k.shape[2]
+    hdv = v.shape[-1]  # value head dim may differ (MLA)
+    G = H // KV
+    scale = hd ** -0.5 if scale is None else scale
+
+    chunk = min(chunk, Sk)
+    pad = (-Sk) % chunk
+    if pad:
+        k = jnp.pad(k, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        v = jnp.pad(v, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        if k_positions is not None:
+            k_positions = jnp.pad(k_positions, ((0, 0), (0, pad)), constant_values=-1)
+    n_chunks = (Sk + pad) // chunk
+
+    q_offset = jnp.asarray(q_offset)
+    kv_len = jnp.asarray(Sk if kv_len is None else kv_len)
+    q_pos = q_offset[..., None] + jnp.arange(Sq)  # [B?, Sq]
+    q_pos = jnp.broadcast_to(q_pos, (B, Sq))
+
+    qr = (q.reshape(B, Sq, KV, G, hd) * scale).astype(jnp.float32)
+    ks = k.reshape(B, n_chunks, chunk, KV, hd).transpose(1, 0, 2, 3, 4)
+    vs = v.reshape(B, n_chunks, chunk, KV, hdv).transpose(1, 0, 2, 3, 4)
+    if k_positions is not None:
+        kp = k_positions.reshape(B, n_chunks, chunk).transpose(1, 0, 2)  # [nc, B, C]
+
+    def body(carry, inp):
+        m, l, acc = carry
+        if k_positions is not None:
+            c_idx, kc, vc, kpc = inp
+        else:
+            c_idx, kc, vc = inp
+        # scores: [B, KV, G, Sq, C]
+        s = jnp.einsum("bqkgd,bckd->bkgqc", qr, kc.astype(jnp.float32))
+        if k_positions is not None:
+            k_pos = kpc  # [B, C] explicit global positions
+            ok = k_pos[:, None, :] >= 0  # [B, 1(Sq), C]
+        else:
+            k_pos = jnp.broadcast_to(c_idx * chunk + jnp.arange(chunk), (B, chunk))
+            valid = k_pos < jnp.broadcast_to(kv_len, (B,))[:, None]  # [B, C]
+            ok = valid[:, None, :]  # [B, 1(Sq), C]
+        if causal:
+            ok = ok & (q_pos[:, :, None] >= k_pos[:, None, :])
+        if window is not None:
+            ok = ok & (q_pos[:, :, None] - k_pos[:, None, :] < window)
+        s = jnp.where(ok[:, None, None, :, :], s, NEG_INF)
+        m_new = jnp.maximum(m, s.max(axis=-1))
+        p = jnp.exp(s - m_new[..., None])
+        corr = jnp.exp(m - m_new)
+        l = l * corr + p.sum(axis=-1)
+        acc = acc * corr[..., None] + jnp.einsum(
+            "bkgqc,bckd->bkgqd", p, vc.astype(jnp.float32)
+        )
+        return (m_new, l, acc), None
+
+    m0 = jnp.full((B, KV, G, Sq), NEG_INF, jnp.float32)
+    l0 = jnp.zeros((B, KV, G, Sq), jnp.float32)
+    a0 = jnp.zeros((B, KV, G, Sq, hdv), jnp.float32)
+    xs = (
+        (jnp.arange(n_chunks), ks, vs, kp)
+        if k_positions is not None
+        else (jnp.arange(n_chunks), ks, vs)
+    )
+    (m, l, acc), _ = jax.lax.scan(body, (m0, l0, a0), xs, unroll=n_chunks if unroll else 1)
+    out = acc / jnp.maximum(l, 1e-30)[..., None]
+    return out.transpose(0, 3, 1, 2, 4).reshape(B, Sq, H, hdv).astype(q.dtype)
+
+
+# ---------------------------------------------------------------------------
+# GQA layer
+# ---------------------------------------------------------------------------
+
+def attn_init(key, cfg, cross: bool = False) -> dict:
+    D, H, KV, hd = cfg.d_model, cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    ks = jax.random.split(key, 4)
+    dt = cfg.jparam_dtype
+    return {
+        "wq": dense_init(ks[0], (D, H * hd), dtype=dt),
+        "wk": dense_init(ks[1], (D, KV * hd), dtype=dt),
+        "wv": dense_init(ks[2], (D, KV * hd), dtype=dt),
+        "wo": dense_init(ks[3], (H * hd, D), dtype=dt),
+    }
+
+
+def init_kv_cache(cfg, batch: int, max_len: int, n_layers: int, stacked=True):
+    KV, hd = cfg.n_kv_heads, cfg.hd
+    shape = (n_layers, batch, max_len, KV, hd) if stacked else (batch, max_len, KV, hd)
+    return {
+        "k": jnp.zeros(shape, cfg.jdtype),
+        "v": jnp.zeros(shape, cfg.jdtype),
+    }
+
+
+def attention(
+    cfg,
+    p: dict,
+    x: jax.Array,  # [B, S, D]
+    *,
+    positions=None,  # [B, S] or None -> arange
+    causal: bool = True,
+    window: Optional[int] = None,
+    rope: bool = True,
+    kv_from: Optional[jax.Array] = None,  # cross-attention source [B, Se, D]
+    cache: Optional[dict] = None,  # {"k","v"} [B, L_max, KV, hd]
+    cache_pos=None,  # [B] write offset for this step
+):
+    """Returns (out [B,S,D], new_cache or None)."""
+    B, S, D = x.shape
+    H, KV, hd = cfg.n_heads, cfg.n_kv_heads, cfg.hd
+    src = x if kv_from is None else kv_from
+    q = linear(x, p["wq"]).reshape(B, S, H, hd)
+    k = linear(src, p["wk"]).reshape(B, src.shape[1], KV, hd)
+    v = linear(src, p["wv"]).reshape(B, src.shape[1], KV, hd)
+
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+    if rope and kv_from is None:
+        q = apply_rope(q, positions, cfg.rope_theta)
+        k = apply_rope(k, positions, cfg.rope_theta)
+
+    new_cache = None
+    if cache is not None:
+        # scatter this step's K/V at cache_pos (decode: S == 1)
+        def put(buf, new):
+            return jax.vmap(
+                lambda b, n, i: jax.lax.dynamic_update_slice_in_dim(b, n, i, axis=0)
+            )(buf, new, cache_pos)
+
+        ck, cv = put(cache["k"], k), put(cache["v"], v)
+        new_cache = {"k": ck, "v": cv}
+        kv_len = cache_pos + S
+        out = chunked_attention(
+            q, ck, cv,
+            causal=causal, window=window,
+            q_offset=cache_pos, kv_len=kv_len, chunk=cfg.attn_chunk,
+            unroll=cfg.unroll_scans,
+        )
+    else:
+        out = chunked_attention(
+            q, k, v,
+            causal=causal and kv_from is None, window=window,
+            q_offset=positions[:, 0] * 0 if kv_from is not None else 0,
+            chunk=cfg.attn_chunk, unroll=cfg.unroll_scans,
+        )
+    return linear(out.reshape(B, S, H * hd), p["wo"]), new_cache
+
+
+# ---------------------------------------------------------------------------
+# MLA (DeepSeek-V2 latent attention)
+# ---------------------------------------------------------------------------
+
+def mla_init(key, cfg) -> dict:
+    D, H = cfg.d_model, cfg.n_heads
+    r = cfg.kv_lora_rank
+    dn, dr, dv = cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    ks = jax.random.split(key, 5)
+    dt = cfg.jparam_dtype
+    return {
+        "wq": dense_init(ks[0], (D, H * (dn + dr)), dtype=dt),
+        "wdkv": dense_init(ks[1], (D, r + dr), dtype=dt),  # c_kv + shared k_rope
+        "wuk": dense_init(ks[2], (r, H * dn), dtype=dt),
+        "wuv": dense_init(ks[3], (r, H * dv), dtype=dt),
+        "wo": dense_init(ks[4], (H * dv, D), dtype=dt),
+    }
+
+
+def init_mla_cache(cfg, batch: int, max_len: int, n_layers: int):
+    r, dr = cfg.kv_lora_rank, cfg.qk_rope_head_dim
+    return {"ckv": jnp.zeros((n_layers, batch, max_len, r + dr), cfg.jdtype)}
+
+
+def mla_attention(cfg, p, x, *, positions=None, cache=None, cache_pos=None):
+    """MLA forward.  Prefill/train: expand the latent to per-head K/V and
+    run chunked attention.  Decode (cache path): *absorbed* form — queries
+    are projected into the latent space so the per-token cache stays
+    ``r + rope_dim`` wide and is never expanded (the MLA contribution)."""
+    B, S, D = x.shape
+    H = cfg.n_heads
+    r, dn, dr, dv = cfg.kv_lora_rank, cfg.qk_nope_head_dim, cfg.qk_rope_head_dim, cfg.v_head_dim
+    if positions is None:
+        positions = jnp.broadcast_to(jnp.arange(S), (B, S))
+
+    q = linear(x, p["wq"]).reshape(B, S, H, dn + dr)
+    q_nope, q_rope = q[..., :dn], q[..., dn:]
+    q_rope = apply_rope(q_rope, positions, cfg.rope_theta)
+
+    dkv = linear(x, p["wdkv"])  # [B, S, r + dr]
+    ckv, k_rope = dkv[..., :r], dkv[..., r:]
+    k_rope = apply_rope(k_rope[:, :, None, :], positions, cfg.rope_theta)[:, :, 0, :]
+    scale = (dn + dr) ** -0.5
+
+    if cache is None:
+        k_nope = linear(ckv, p["wuk"]).reshape(B, S, H, dn)
+        vv = linear(ckv, p["wuv"]).reshape(B, S, H, dv)
+        k = jnp.concatenate(
+            [k_nope, jnp.broadcast_to(k_rope[:, :, None, :], (B, S, H, dr))], axis=-1
+        )
+        qc = jnp.concatenate([q_nope, q_rope], axis=-1)
+        out = chunked_attention(
+            qc, k, vv, causal=True, chunk=cfg.attn_chunk, scale=scale,
+            unroll=cfg.unroll_scans,
+        )
+        return linear(out.reshape(B, S, H * dv), p["wo"]), None
+
+    # --- absorbed decode path ------------------------------------------------
+    new = jnp.concatenate([ckv, k_rope], axis=-1)  # [B, S, r+dr]
+    buf = jax.vmap(
+        lambda b, n, i: jax.lax.dynamic_update_slice_in_dim(b, n, i, axis=0)
+    )(cache["ckv"], new, cache_pos)
+    kv_len = cache_pos + S
+    L = buf.shape[1]
+    c_all, kr_all = buf[..., :r], buf[..., r:]
+
+    # absorb W_uk into q:  q_lat[b,s,h,r] = q_nope · W_uk[·,h,·]
+    wuk = p["wuk"].reshape(r, H, dn)
+    q_lat = jnp.einsum("bshd,rhd->bshr", q_nope.astype(jnp.float32), wuk.astype(jnp.float32))
+    s_lat = jnp.einsum("bshr,blr->bhsl", q_lat, c_all.astype(jnp.float32))
+    s_rope = jnp.einsum("bshd,bld->bhsl", q_rope.astype(jnp.float32), kr_all.astype(jnp.float32))
+    s = (s_lat + s_rope) * scale
+    k_pos = jnp.arange(L)
+    q_pos = cache_pos[:, None] + jnp.arange(S)
+    ok = (k_pos[None, None, :] < kv_len[:, None, None]) & (
+        q_pos[:, :, None] >= k_pos[None, None, :]
+    )
+    s = jnp.where(ok[:, None, :, :], s, NEG_INF)
+    w = jax.nn.softmax(s, axis=-1)
+    o_lat = jnp.einsum("bhsl,blr->bshr", w, c_all.astype(jnp.float32))  # [B,S,H,r]
+    wuv = p["wuv"].reshape(r, H, dv)
+    out = jnp.einsum("bshr,rhd->bshd", o_lat, wuv.astype(jnp.float32)).astype(x.dtype)
+    return linear(out.reshape(B, S, H * dv), p["wo"]), {"ckv": buf}

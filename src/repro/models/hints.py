@@ -1,0 +1,54 @@
+"""Activation-sharding hints (cfg.act_sharding — §Perf optimization).
+
+``shard_hint(x, "dp", None, "model")`` pins a traced activation to the
+named mesh axes via ``with_sharding_constraint`` — resolved against the
+AMBIENT abstract mesh at trace time, with divisibility fallback, and a
+silent no-op outside a mesh context (keeps every non-distributed call
+site working unchanged).
+"""
+from __future__ import annotations
+
+import jax
+from jax.sharding import PartitionSpec as P
+
+__all__ = ["shard_hint"]
+
+
+def shard_hint(x, *spec):
+    try:
+        mesh = jax.sharding.get_abstract_mesh()
+        names = tuple(mesh.axis_names)
+    except Exception:
+        return x
+    if not names:
+        return x
+    resolved = [None] * len(spec)
+    used = set()
+    for dim, s in enumerate(spec):
+        if s is None:
+            continue
+        if s == "dp":
+            axes = tuple(a for a in ("pod", "data") if a in names and a not in used)
+        else:
+            axes = (s,) if (s in names and s not in used) else ()
+        n = 1
+        for a in axes:
+            n *= mesh.shape[a]
+        if not axes or n == 0 or x.shape[dim] % n or x.shape[dim] < n:
+            continue
+        used.update(axes)
+        resolved[dim] = axes[0] if len(axes) == 1 else axes
+    # fallback: if "model" was requested but its dim didn't divide (e.g.
+    # yi-34b's 56 heads on a 16-way axis), try the NEXT dim to the right
+    # (the per-head feature dim) so TP still applies.
+    if "model" in [s for s in spec] and "model" not in used and "model" in names:
+        want = list(spec).index("model")
+        m = mesh.shape["model"]
+        for dim in list(range(want + 1, len(spec))) + list(range(want - 1, 0, -1)):
+            if resolved[dim] is None and x.shape[dim] % m == 0 and x.shape[dim] >= m:
+                resolved[dim] = "model"
+                break
+    try:
+        return jax.lax.with_sharding_constraint(x, P(*resolved))
+    except Exception:
+        return x

@@ -1,0 +1,86 @@
+"""Common neural-net layers (pure jnp, params as dicts)."""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+import numpy as np
+
+__all__ = [
+    "dense_init",
+    "rmsnorm",
+    "layernorm",
+    "linear",
+    "mlp_init",
+    "mlp_apply",
+    "rope_freqs",
+    "apply_rope",
+]
+
+
+def dense_init(key, shape, scale=None, dtype=jnp.float32):
+    """Truncated-normal fan-in init."""
+    fan_in = shape[0] if len(shape) > 1 else shape[-1]
+    scale = scale if scale is not None else 1.0 / np.sqrt(fan_in)
+    return (jax.random.truncated_normal(key, -2.0, 2.0, shape) * scale).astype(dtype)
+
+
+def rmsnorm(x, gamma, eps=1e-6):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    x = x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + eps)
+    return (x * gamma.astype(jnp.float32)).astype(dt)
+
+
+def layernorm(x, gamma, beta, eps=1e-5):
+    dt = x.dtype
+    x = x.astype(jnp.float32)
+    mu = jnp.mean(x, axis=-1, keepdims=True)
+    var = jnp.mean(jnp.square(x - mu), axis=-1, keepdims=True)
+    y = (x - mu) * jax.lax.rsqrt(var + eps)
+    return (y * gamma.astype(jnp.float32) + beta.astype(jnp.float32)).astype(dt)
+
+
+def linear(x, w, b=None):
+    y = x @ w.astype(x.dtype)
+    if b is not None:
+        y = y + b.astype(y.dtype)
+    return y
+
+
+def mlp_init(key, d_model, d_ff, act, dtype):
+    ks = jax.random.split(key, 3)
+    p = {
+        "w_in": dense_init(ks[0], (d_model, d_ff), dtype=dtype),
+        "w_out": dense_init(ks[1], (d_ff, d_model), dtype=dtype),
+    }
+    if act == "silu":  # gated (SwiGLU)
+        p["w_gate"] = dense_init(ks[2], (d_model, d_ff), dtype=dtype)
+    return p
+
+
+def mlp_apply(p, x, act="silu", hint=None):
+    if act == "silu":
+        h = jax.nn.silu(linear(x, p["w_gate"])) * linear(x, p["w_in"])
+    else:
+        h = jax.nn.gelu(linear(x, p["w_in"]))
+    if hint is not None:
+        h = hint(h)
+    return linear(h, p["w_out"])
+
+
+def rope_freqs(head_dim: int, theta: float):
+    return 1.0 / (theta ** (np.arange(0, head_dim, 2, dtype=np.float32) / head_dim))
+
+
+def apply_rope(x, positions, theta=1e4):
+    """x: [..., S, H, hd]; positions: [..., S] int32."""
+    hd = x.shape[-1]
+    freqs = jnp.asarray(rope_freqs(hd, theta))  # [hd/2]
+    ang = positions[..., :, None].astype(jnp.float32) * freqs  # [..., S, hd/2]
+    cos, sin = jnp.cos(ang)[..., None, :], jnp.sin(ang)[..., None, :]
+    x1, x2 = x[..., : hd // 2], x[..., hd // 2 :]
+    dt = x.dtype
+    x1f, x2f = x1.astype(jnp.float32), x2.astype(jnp.float32)
+    return jnp.concatenate(
+        [x1f * cos - x2f * sin, x2f * cos + x1f * sin], axis=-1
+    ).astype(dt)

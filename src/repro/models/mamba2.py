@@ -1,0 +1,256 @@
+"""Mamba2 (SSD) mixer — chunked state-space-dual scan, pure jnp.
+
+Used by zamba2 (hybrid 'M'/'H' layers).  The chunked SSD algorithm
+(Dao & Gu 2024) splits the sequence into chunks: intra-chunk outputs are
+dense matmuls (MXU-friendly), inter-chunk state is carried by a short
+``lax.scan`` over chunks — this is the jnp twin of the Pallas kernel in
+``repro.kernels.mamba2_scan``.
+
+TP note: the projections are kept *separate* (w_z/w_x/w_B/w_C/w_dt
+rather than one fused in_proj) so the head dimension (``d_in``) shards
+cleanly over the "model" mesh axis — per-head SSD states never cross
+shards, B/C (state projections, shared across heads) stay replicated,
+and the only TP collective is the out-projection psum.  This is the
+hardware adaptation of the paper's "aligned arrays need no
+communication" observation.
+
+Latency-hiding tie-in: under sequence-parallel execution the chunk-final
+states are the only cross-shard dependency; ``repro.comm`` ships them via
+a ppermute ring while each shard's intra-chunk matmuls (the bulk of the
+FLOPs) proceed locally.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, rmsnorm
+
+__all__ = [
+    "mamba2_init",
+    "mamba2_apply",
+    "mamba2_step",
+    "init_mamba2_state",
+    "ssd_chunked",
+    "ssd_step",
+]
+
+
+def mamba2_init(key, cfg) -> dict:
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    n = cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    ks = jax.random.split(key, 9)
+    dt = cfg.jparam_dtype
+    K = cfg.ssm_conv
+    return {
+        "w_z": dense_init(ks[0], (D, d_in), dtype=dt),
+        "w_x": dense_init(ks[1], (D, d_in), dtype=dt),
+        "w_B": dense_init(ks[2], (D, n), dtype=dt),
+        "w_C": dense_init(ks[3], (D, n), dtype=dt),
+        "w_dt": dense_init(ks[4], (D, nh), dtype=dt),
+        "conv_x": dense_init(ks[5], (K, d_in), dtype=dt),
+        "conv_B": dense_init(ks[6], (K, n), dtype=dt),
+        "conv_C": dense_init(ks[7], (K, n), dtype=dt),
+        "conv_x_b": jnp.zeros((d_in,), dt),
+        "conv_B_b": jnp.zeros((n,), dt),
+        "conv_C_b": jnp.zeros((n,), dt),
+        "A_log": jnp.zeros((nh,), jnp.float32),  # A = -exp(A_log) = -1
+        "D": jnp.ones((nh,), jnp.float32),
+        "dt_bias": jnp.zeros((nh,), jnp.float32),
+        "norm_g": jnp.ones((d_in,), dt),
+        "w_out": dense_init(ks[8], (d_in, D), dtype=dt),
+    }
+
+
+def _segsum(x):
+    """Stable 'segment sum' producing the lower-triangular decay matrix:
+    out[i, j] = sum_{k=j+1..i} x[k]  (for j < i), -inf above diagonal."""
+    T = x.shape[-1]
+    x = jnp.broadcast_to(x[..., None], (*x.shape, T))  # [..., i, j] = x[i]
+    mask = jnp.tril(jnp.ones((T, T), bool), -1)
+    x = jnp.where(mask, x, 0)
+    x_seg = jnp.cumsum(x, axis=-2)
+    mask = jnp.tril(jnp.ones((T, T), bool), 0)
+    return jnp.where(mask, x_seg, -jnp.inf)
+
+
+def ssd_chunked(x, dt, A, B, C, *, chunk: int, init_state=None):
+    """Chunked SSD scan.
+
+    x:  [b, s, h, p]   (inputs, p = head dim)
+    dt: [b, s, h]      (softplus'd step sizes, >0)
+    A:  [h]            (negative decay rates)
+    B:  [b, s, n]      (input projection, shared across heads; ngroups=1)
+    C:  [b, s, n]      (output projection)
+    init_state: [b, h, p, n] or None.
+    Returns (y [b, s, h, p], final_state [b, h, p, n]).
+    """
+    b, s, h, p = x.shape
+    n = B.shape[-1]
+    pad = (-s) % chunk
+    if pad:
+        x = jnp.pad(x, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        dt = jnp.pad(dt, ((0, 0), (0, pad), (0, 0)))
+        B = jnp.pad(B, ((0, 0), (0, pad), (0, 0)))
+        C = jnp.pad(C, ((0, 0), (0, pad), (0, 0)))
+    S = x.shape[1]
+    nc = S // chunk
+
+    xc = x.reshape(b, nc, chunk, h, p)
+    dtc = dt.reshape(b, nc, chunk, h).astype(jnp.float32)
+    Bc = B.reshape(b, nc, chunk, n).astype(jnp.float32)
+    Cc = C.reshape(b, nc, chunk, n).astype(jnp.float32)
+
+    dA = dtc * A[None, None, None, :]  # [b, nc, c, h] (negative)
+    dA_cum = jnp.cumsum(dA, axis=2)
+
+    # ---- intra-chunk (dense, MXU): Y_diag = (L ⊙ C Bᵀ) · (dt x)
+    L = jnp.exp(_segsum(dA.transpose(0, 1, 3, 2)))  # [b, nc, h, c, c]
+    scores = jnp.einsum("bzcn,bzln->bzcl", Cc, Bc)  # [b, nc, c(l_q), c(l_k)]
+    xdt = xc.astype(jnp.float32) * dtc[..., None]  # [b, nc, c, h, p]
+    y_diag = jnp.einsum("bzhcl,bzcl,bzlhp->bzchp", L, scores, xdt)
+
+    # ---- chunk-final states: states_z = Σ_l exp(dA_cum[-1]-dA_cum[l]) B_l x_l
+    decay_states = jnp.exp(dA_cum[:, :, -1:, :] - dA_cum)  # [b, nc, c, h]
+    states = jnp.einsum("bzln,bzlh,bzlhp->bzhpn", Bc, decay_states * dtc, xc.astype(jnp.float32))
+
+    # ---- inter-chunk recurrence over nc (short scan)
+    chunk_decay = jnp.exp(dA_cum[:, :, -1, :])  # [b, nc, h]
+    s0 = (
+        jnp.zeros((b, h, p, n), jnp.float32)
+        if init_state is None
+        else init_state.astype(jnp.float32)
+    )
+
+    def body(carry, inp):
+        st_z, dec_z = inp  # [b,h,p,n], [b,h]
+        new = carry * dec_z[..., None, None] + st_z
+        return new, carry  # emit the state *entering* this chunk
+
+    fin, prev_states = jax.lax.scan(
+        body,
+        s0,
+        (states.transpose(1, 0, 2, 3, 4), chunk_decay.transpose(1, 0, 2)),
+    )
+    prev_states = prev_states.transpose(1, 0, 2, 3, 4)  # [b, nc, h, p, n]
+
+    # ---- inter-chunk output: y_off = C_l · (decay_in[l] * prev_state)
+    state_decay_in = jnp.exp(dA_cum)  # [b, nc, c, h]
+    y_off = jnp.einsum("bzcn,bzhpn,bzch->bzchp", Cc, prev_states, state_decay_in)
+
+    y = (y_diag + y_off).reshape(b, S, h, p)
+    if pad:
+        y = y[:, :s]
+    return y.astype(x.dtype), fin
+
+
+def ssd_step(state, x_t, dt_t, A, B_t, C_t):
+    """One recurrent step.  state: [b,h,p,n]; x_t: [b,h,p]; dt_t: [b,h];
+    B_t, C_t: [b,n].  Returns (y_t [b,h,p], new_state)."""
+    dA = jnp.exp(dt_t.astype(jnp.float32) * A)  # [b, h]
+    dBx = jnp.einsum(
+        "bn,bh,bhp->bhpn", B_t.astype(jnp.float32), dt_t.astype(jnp.float32), x_t.astype(jnp.float32)
+    )
+    new = state * dA[..., None, None] + dBx
+    y = jnp.einsum("bhpn,bn->bhp", new, C_t.astype(jnp.float32))
+    return y.astype(x_t.dtype), new
+
+
+def init_mamba2_state(cfg, batch: int, n_layers: int):
+    D = cfg.d_model
+    d_in = cfg.ssm_expand * D
+    n = cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    K = cfg.ssm_conv
+    return {
+        "conv_x": jnp.zeros((n_layers, batch, K - 1, d_in), cfg.jdtype),
+        "conv_B": jnp.zeros((n_layers, batch, K - 1, n), cfg.jdtype),
+        "conv_C": jnp.zeros((n_layers, batch, K - 1, n), cfg.jdtype),
+        "ssm": jnp.zeros((n_layers, batch, nh, cfg.ssm_head_dim, n), jnp.float32),
+    }
+
+
+def _causal_conv(x, w, b, hist):
+    """Depthwise causal conv.  x: [B, S, C]; w: [K, C]; hist: [B, K-1, C]
+    (zeros for fresh sequences).  Returns (y [B, S, C], new_hist)."""
+    K = w.shape[0]
+    S = x.shape[1]
+    padded = jnp.concatenate([hist.astype(x.dtype), x], axis=1)  # [B, S+K-1, C]
+    y = sum(padded[:, k : k + S, :] * w[k] for k in range(K)) + b
+    return jax.nn.silu(y), padded[:, -(K - 1) :, :]
+
+
+def mamba2_apply(cfg, p, x, *, init_state=None):
+    """Full-sequence forward.  x: [B, S, D] → (y [B, S, D], final state)."""
+    Bsz, S, D = x.shape
+    d_in = cfg.ssm_expand * D
+    n = cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    K = cfg.ssm_conv
+
+    z = x @ p["w_z"].astype(x.dtype)
+    xs = x @ p["w_x"].astype(x.dtype)
+    Bm = x @ p["w_B"].astype(x.dtype)
+    Cm = x @ p["w_C"].astype(x.dtype)
+    dt = x @ p["w_dt"].astype(x.dtype)
+
+    zeros = lambda c: jnp.zeros((Bsz, K - 1, c), x.dtype)
+    hx = zeros(d_in) if init_state is None else init_state["conv_x"]
+    hB = zeros(n) if init_state is None else init_state["conv_B"]
+    hC = zeros(n) if init_state is None else init_state["conv_C"]
+    xs, new_hx = _causal_conv(xs, p["conv_x"].astype(x.dtype), p["conv_x_b"].astype(x.dtype), hx)
+    Bm, new_hB = _causal_conv(Bm, p["conv_B"].astype(x.dtype), p["conv_B_b"].astype(x.dtype), hB)
+    Cm, new_hC = _causal_conv(Cm, p["conv_C"].astype(x.dtype), p["conv_C_b"].astype(x.dtype), hC)
+
+    xs = xs.reshape(Bsz, S, nh, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, S, nh]
+    A = -jnp.exp(p["A_log"])  # [nh]
+
+    y, fin = ssd_chunked(
+        xs, dt, A, Bm, Cm, chunk=cfg.ssm_chunk,
+        init_state=None if init_state is None else init_state["ssm"],
+    )
+    y = y + xs * p["D"].astype(xs.dtype)[None, None, :, None]
+    y = y.reshape(Bsz, S, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_g"])
+    out = y @ p["w_out"].astype(y.dtype)
+    state = {"conv_x": new_hx, "conv_B": new_hB, "conv_C": new_hC, "ssm": fin}
+    return out, state
+
+
+def mamba2_step(cfg, p, x_t, state):
+    """Single-token decode.  x_t: [B, 1, D]."""
+    Bsz = x_t.shape[0]
+    D = x_t.shape[-1]
+    d_in = cfg.ssm_expand * D
+    n = cfg.ssm_state
+    nh = d_in // cfg.ssm_head_dim
+    xt = x_t[:, 0, :]
+
+    z = xt @ p["w_z"].astype(xt.dtype)
+    xs = xt @ p["w_x"].astype(xt.dtype)
+    Bm = xt @ p["w_B"].astype(xt.dtype)
+    Cm = xt @ p["w_C"].astype(xt.dtype)
+    dt = xt @ p["w_dt"].astype(xt.dtype)
+
+    def conv1(v, w, b, hist):
+        window = jnp.concatenate([hist, v[:, None, :].astype(hist.dtype)], axis=1)  # [B, K, C]
+        y = jnp.einsum("bkc,kc->bc", window, w.astype(window.dtype)) + b.astype(window.dtype)
+        return jax.nn.silu(y), window[:, 1:, :]
+
+    xs, new_hx = conv1(xs, p["conv_x"], p["conv_x_b"], state["conv_x"])
+    Bm, new_hB = conv1(Bm, p["conv_B"], p["conv_B_b"], state["conv_B"])
+    Cm, new_hC = conv1(Cm, p["conv_C"], p["conv_C_b"], state["conv_C"])
+
+    xs = xs.reshape(Bsz, nh, cfg.ssm_head_dim)
+    dt = jax.nn.softplus(dt.astype(jnp.float32) + p["dt_bias"])  # [B, nh]
+    A = -jnp.exp(p["A_log"])
+
+    y, new_ssm = ssd_step(state["ssm"], xs, dt, A, Bm, Cm)
+    y = y + xs * p["D"].astype(xs.dtype)[None, :, None]
+    y = y.reshape(Bsz, d_in)
+    y = rmsnorm(y * jax.nn.silu(z), p["norm_g"])
+    out = (y @ p["w_out"].astype(y.dtype))[:, None, :]
+    return out, {"conv_x": new_hx, "conv_B": new_hB, "conv_C": new_hC, "ssm": new_ssm}

@@ -1,0 +1,127 @@
+"""Mixture-of-Experts FFN: top-k token-choice routing with capacity
+(GShard-style dense dispatch einsums — shardable under GSPMD with experts
+on the "model" axis), plus DeepSeek-style always-on shared experts.
+
+Latency-hiding tie-in (paper §5.4): the routed path's dispatch einsum is
+the *communication* (it lowers to all-to-all / collective matmuls when
+experts are sharded); the shared-expert branch is pure local compute with
+no dependency on the dispatch — emitted between dispatch and combine so
+XLA overlaps it with the in-flight collective, exactly the paper's
+"compute local sub-view-blocks while remote blocks are in transfer".
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init, linear, mlp_init, mlp_apply
+
+__all__ = ["moe_init", "moe_apply"]
+
+
+def moe_init(key, cfg) -> dict:
+    D = cfg.d_model
+    F = cfg.moe_d_ff or cfg.d_ff
+    E = cfg.n_experts
+    ks = jax.random.split(key, 5)
+    dt = cfg.jparam_dtype
+    p = {
+        "router": dense_init(ks[0], (D, E), dtype=jnp.float32),
+        "w_gate": dense_init(ks[1], (E, D, F), dtype=dt),
+        "w_in": dense_init(ks[2], (E, D, F), dtype=dt),
+        "w_out": dense_init(ks[3], (E, F, D), dtype=dt),
+    }
+    if cfg.n_shared_experts:
+        p["shared"] = mlp_init(ks[4], D, cfg.n_shared_experts * F, "silu", dt)
+    return p
+
+
+def _route(cfg, router_w, xf):
+    """Top-k routing.  Returns (weights [T,K], expert_idx [T,K], aux_loss)."""
+    logits = (xf.astype(jnp.float32) @ router_w).astype(jnp.float32)  # [T, E]
+    probs = jax.nn.softmax(logits, axis=-1)
+    gate, idx = jax.lax.top_k(probs, cfg.top_k)  # [T, K]
+    gate = gate / jnp.maximum(gate.sum(-1, keepdims=True), 1e-9)
+    # Switch/GShard load-balance loss: E * Σ_e fraction_e · prob_e
+    E = cfg.n_experts
+    onehot = jax.nn.one_hot(idx[:, 0], E, dtype=jnp.float32)
+    f = onehot.mean(0)
+    pmean = probs.mean(0)
+    aux = E * jnp.sum(f * pmean)
+    return gate, idx, aux
+
+
+def _dispatch_group(cfg, p, xg, gate, idx):
+    """One token group through the routed experts.
+
+    xg: [T, D]; gate/idx: [T, K].  Capacity per expert
+    C = ceil(T·K/E · capacity_factor); overflow drops (standard).
+    """
+    T, D = xg.shape
+    E, K = cfg.n_experts, cfg.top_k
+    C = max(1, int(T * K / E * cfg.capacity_factor))
+
+    # position of each (token, choice) within its expert's capacity buffer
+    eo = jax.nn.one_hot(idx, E, dtype=jnp.int32)  # [T, K, E]
+    flat = eo.reshape(T * K, E)
+    pos = jnp.cumsum(flat, axis=0) - 1  # [T*K, E]
+    pos = (pos * flat).sum(-1).reshape(T, K)  # [T, K] position in expert
+    keep = pos < C
+    gate = gate * keep
+
+    # dispatch one-hots: [T, K, E] expert and [T, K, C] slot
+    slot = jax.nn.one_hot(jnp.where(keep, pos, C), C, dtype=xg.dtype)  # OOB → all-zero row
+    eoh = eo.astype(xg.dtype)
+    # COMM: build expert inputs [E, C, D] (lowers to a2a/collective matmul
+    # when E is model-sharded and T is data-sharded)
+    xe = jnp.einsum("tke,tkc,td->ecd", eoh, slot, xg)
+    # expert FFN (runs where the experts live)
+    h = jax.nn.silu(jnp.einsum("ecd,edf->ecf", xe, p["w_gate"].astype(xg.dtype)))
+    h = h * jnp.einsum("ecd,edf->ecf", xe, p["w_in"].astype(xg.dtype))
+    ye = jnp.einsum("ecf,efd->ecd", h, p["w_out"].astype(xg.dtype))
+    # COMM: combine back to token order, weighted by the gate
+    comb = jnp.einsum("tke,tkc,tk->tec", eoh, slot, gate.astype(xg.dtype))
+    return jnp.einsum("tec,ecd->td", comb, ye)
+
+
+def moe_apply(cfg, p, x, *, group_size=None):
+    """x: [B, S, D] → (y, aux_loss)."""
+    B, S, D = x.shape
+    if group_size is None:
+        group_size = cfg.moe_group_size
+    xf = x.reshape(B * S, D)
+    T = xf.shape[0]
+    gate, idx, aux = _route(cfg, p["router"], xf)
+
+    g = min(group_size, T)
+    n_groups = (T + g - 1) // g
+    pad = n_groups * g - T
+    if pad:
+        xf = jnp.pad(xf, ((0, pad), (0, 0)))
+        gate = jnp.pad(gate, ((0, pad), (0, 0)))
+        idx = jnp.pad(idx, ((0, pad), (0, 0)))
+
+    if n_groups == 1:
+        routed = _dispatch_group(cfg, p, xf, gate, idx)
+    else:
+        xs = xf.reshape(n_groups, g, D)
+        gs = gate.reshape(n_groups, g, -1)
+        ids = idx.reshape(n_groups, g, -1)
+        if cfg.unroll_scans:
+            # cost-pass: unrolled so the compiled artifact counts every
+            # group's dispatch (lax.map bodies are costed once by XLA)
+            routed = jnp.concatenate(
+                [_dispatch_group(cfg, p, xs[i], gs[i], ids[i]) for i in range(n_groups)]
+            )
+        else:
+            routed = jax.lax.map(
+                lambda a: _dispatch_group(cfg, p, a[0], a[1], a[2]), (xs, gs, ids)
+            ).reshape(n_groups * g, D)
+
+    # local branch — independent of the dispatched collective, so XLA can
+    # overlap it with the routed path (paper §5.4)
+    if "shared" in p:
+        routed = routed[:T] + mlp_apply(p["shared"], x.reshape(T, D), "silu")
+    else:
+        routed = routed[:T]
+    return routed.reshape(B, S, D), aux

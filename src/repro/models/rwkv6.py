@@ -1,0 +1,275 @@
+"""RWKV6 "Finch" block — data-dependent decay linear recurrence, pure jnp.
+
+Time-mix (wkv) is computed with a *chunked* algorithm: intra-chunk
+contributions are dense einsums (MXU-friendly), the [hd_k, hd_v] state is
+carried across chunks by a short ``lax.scan`` — same structure as the SSD
+scan and the jnp twin of ``repro.kernels.rwkv6_wkv``.
+
+Per head (head size N), with per-channel data-dependent decay w_t ∈ (0,1):
+
+    y_t = r_t · (S_{t-1} + diag(u) k_t v_tᵀ)
+    S_t = diag(w_t) S_{t-1} + k_t v_tᵀ
+
+Faithful-to-Finch details kept: token-shift ddlerp with low-rank (LoRA)
+data-dependent mixes for r/k/v/w/g, decay w = exp(-exp(w0 + lora(x_w))),
+per-head bonus u, per-head group-norm on the wkv output, silu gate.
+"""
+from __future__ import annotations
+
+import jax
+import jax.numpy as jnp
+
+from .layers import dense_init
+
+__all__ = [
+    "rwkv6_init",
+    "rwkv6_apply",
+    "rwkv6_step",
+    "init_rwkv6_state",
+    "wkv_chunked",
+    "wkv_step",
+]
+
+LORA_R = 32  # low-rank dim of the ddlerp / decay LoRAs
+
+
+def rwkv6_init(key, cfg) -> dict:
+    D, F = cfg.d_model, cfg.d_ff
+    N = cfg.rwkv_head_size
+    H = D // N
+    ks = jax.random.split(key, 16)
+    dt = cfg.jparam_dtype
+    r = LORA_R
+    return {
+        # time-mix
+        "mu_x": jnp.full((5, D), 0.5, dt),  # base lerp for r,k,v,w,g probes
+        "lora_A": dense_init(ks[0], (5, D, r), dtype=dt),
+        "lora_B": dense_init(ks[1], (5, r, D), dtype=dt),
+        "w0": jnp.full((D,), -0.6, jnp.float32),  # decay bias (w ≈ 0.58)
+        "wA": dense_init(ks[2], (D, r), dtype=dt),
+        "wB": dense_init(ks[3], (r, D), dtype=dt),
+        "u": dense_init(ks[4], (H, N), scale=0.5, dtype=jnp.float32),
+        "Wr": dense_init(ks[5], (D, D), dtype=dt),
+        "Wk": dense_init(ks[6], (D, D), dtype=dt),
+        "Wv": dense_init(ks[7], (D, D), dtype=dt),
+        "Wg": dense_init(ks[8], (D, D), dtype=dt),
+        "Wo": dense_init(ks[9], (D, D), dtype=dt),
+        "ln_g": jnp.ones((D,), dt),
+        "ln_b": jnp.zeros((D,), dt),
+        # channel-mix
+        "cm_mu": jnp.full((2, D), 0.5, dt),  # k, r mixes
+        "Wck": dense_init(ks[10], (D, F), dtype=dt),
+        "Wcv": dense_init(ks[11], (F, D), dtype=dt),
+        "Wcr": dense_init(ks[12], (D, D), dtype=dt),
+        # pre-norms (RWKV uses LayerNorm before each mixer)
+        "ln1_g": jnp.ones((D,), dt),
+        "ln1_b": jnp.zeros((D,), dt),
+        "ln2_g": jnp.ones((D,), dt),
+        "ln2_b": jnp.zeros((D,), dt),
+    }
+
+
+def init_rwkv6_state(cfg, batch: int, n_layers: int):
+    D = cfg.d_model
+    N = cfg.rwkv_head_size
+    H = D // N
+    return {
+        "shift_tm": jnp.zeros((n_layers, batch, D), cfg.jdtype),
+        "shift_cm": jnp.zeros((n_layers, batch, D), cfg.jdtype),
+        "wkv": jnp.zeros((n_layers, batch, H, N, N), jnp.float32),
+    }
+
+
+# ---------------------------------------------------------------------------
+# chunked wkv
+# ---------------------------------------------------------------------------
+
+def wkv_chunked(r, k, v, w, u, *, chunk: int, init_state=None):
+    """r,k,v: [B,T,H,N]; w: [B,T,H,N] decay in (0,1); u: [H,N] bonus.
+    Returns (y [B,T,H,N], final_state [B,H,N,N])."""
+    B, T, H, N = r.shape
+    pad = (-T) % chunk
+    if pad:
+        z = lambda a: jnp.pad(a, ((0, 0), (0, pad), (0, 0), (0, 0)))
+        r, k, v = z(r), z(k), z(v)
+        w = jnp.pad(w, ((0, 0), (0, pad), (0, 0), (0, 0)), constant_values=1.0)
+    S = r.shape[1]
+    nc = S // chunk
+    f32 = lambda a: a.astype(jnp.float32)
+    rc = f32(r).reshape(B, nc, chunk, H, N)
+    kc = f32(k).reshape(B, nc, chunk, H, N)
+    vc = f32(v).reshape(B, nc, chunk, H, N)
+    logw = jnp.log(jnp.maximum(f32(w), 1e-12)).reshape(B, nc, chunk, H, N)
+    cum = jnp.cumsum(logw, axis=2)  # Π_{τ<=t} w_τ, log-space (<= 0)
+    cumprev = cum - logw  # exclusive: Π_{τ<t} w_τ (y_t sees S_{t-1})
+
+    # intra-chunk: y_t += Σ_{j<t} Σ_i r_t[i]·decay(t,j)[i]·k_j[i]·v_j
+    # decay(t, j) applies w_{j+1..t-1} = exp(cumprev_t - cum_j)
+    dec = jnp.exp(
+        jnp.clip(cumprev[:, :, :, None, :, :] - cum[:, :, None, :, :, :], -60.0, 0.0)
+    )  # [B,nc,t,j,H,N]
+    tri = jnp.tril(jnp.ones((chunk, chunk), bool), -1)  # strict j < t
+    att = jnp.einsum("bzthn,bztjhn,bzjhn->bztjh", rc, dec, kc)
+    att = att * tri[None, None, :, :, None]
+    y = jnp.einsum("bztjh,bzjhn->bzthn", att, vc)
+    # diagonal (j == t) with bonus u
+    diag = jnp.einsum("bzthn,hn,bzthn->bzth", rc, u, kc)
+    y = y + diag[..., None] * vc
+
+    # chunk-final states: S_chunk = diag(exp(cum_C)) S_prev
+    #                      + Σ_j (k_j ⊙ exp(cum_C - cum_j)) v_jᵀ
+    k_dec = kc * jnp.exp(jnp.clip(cum[:, :, -1:, :, :] - cum, -60.0, 0.0))
+    s_local = jnp.einsum("bzjhn,bzjhm->bzhnm", k_dec, vc)  # [B,nc,H,N,N]
+    chunk_dec = jnp.exp(jnp.clip(cum[:, :, -1, :, :], -60.0, 0.0))  # [B,nc,H,N]
+
+    s0 = (
+        jnp.zeros((B, H, N, N), jnp.float32)
+        if init_state is None
+        else f32(init_state)
+    )
+
+    def body(carry, inp):
+        sl, cd = inp
+        new = carry * cd[..., None] + sl
+        return new, carry
+
+    fin, prev = jax.lax.scan(
+        body, s0, (s_local.transpose(1, 0, 2, 3, 4), chunk_dec.transpose(1, 0, 2, 3))
+    )
+    prev = prev.transpose(1, 0, 2, 3, 4)  # state entering each chunk
+
+    # inter-chunk: y_t += (r_t ⊙ exp(cumprev_t)) · S_prev — the pre-chunk
+    # state reaching step t has decayed by w_{1..t-1}
+    r_dec = rc * jnp.exp(jnp.clip(cumprev, -60.0, 0.0))
+    y = y + jnp.einsum("bzthn,bzhnm->bzthm", r_dec, prev)
+
+    y = y.reshape(B, S, H, N)
+    if pad:
+        y = y[:, :T]
+    return y.astype(r.dtype), fin
+
+
+def wkv_step(state, r_t, k_t, v_t, w_t, u):
+    """One token.  state: [B,H,N,N]; r/k/v/w_t: [B,H,N]; u: [H,N]."""
+    f32 = lambda a: a.astype(jnp.float32)
+    r_t, k_t, v_t, w_t = map(f32, (r_t, k_t, v_t, w_t))
+    kv = jnp.einsum("bhn,bhm->bhnm", k_t, v_t)
+    y = jnp.einsum("bhn,bhnm->bhm", r_t, state + u[None, :, :, None] * kv)
+    new = state * w_t[..., None] + kv
+    return y, new
+
+
+# ---------------------------------------------------------------------------
+# block forward
+# ---------------------------------------------------------------------------
+
+def _group_norm(y, g, b, H, N, eps=64e-5):
+    """Per-head LayerNorm (RWKV 'ln_x'), y: [..., H*N]."""
+    shp = y.shape
+    y = y.reshape(*shp[:-1], H, N).astype(jnp.float32)
+    mu = y.mean(-1, keepdims=True)
+    var = ((y - mu) ** 2).mean(-1, keepdims=True)
+    y = (y - mu) * jax.lax.rsqrt(var + eps)
+    y = y.reshape(*shp)
+    return y * g.astype(jnp.float32) + b.astype(jnp.float32)
+
+
+def _ddlerp(p, x, xx):
+    """Data-dependent lerp producing the 5 probe inputs [5, B, T, D].
+    xx = shifted(x) - x."""
+    base = x + xx * p["mu_x"][:, None, None, :]  # [5, B, T, D] via broadcast
+    lo = jnp.tanh(jnp.einsum("sbtd,sdr->sbtr", base, p["lora_A"].astype(x.dtype)))
+    mix = p["mu_x"][:, None, None, :] + jnp.einsum(
+        "sbtr,srd->sbtd", lo, p["lora_B"].astype(x.dtype)
+    )
+    return x[None] + xx[None] * mix
+
+
+def _time_mix(cfg, p, x, shifted, wkv_state, *, chunk=None):
+    B, T, D = x.shape
+    N = cfg.rwkv_head_size
+    H = D // N
+    xx = shifted - x
+    probes = _ddlerp(p, x, xx)  # [5(r,k,v,w,g), B, T, D]
+    xr, xk, xv, xw, xg = probes
+    r = (xr @ p["Wr"].astype(x.dtype)).reshape(B, T, H, N)
+    k = (xk @ p["Wk"].astype(x.dtype)).reshape(B, T, H, N)
+    v = (xv @ p["Wv"].astype(x.dtype)).reshape(B, T, H, N)
+    g = jax.nn.silu(xg @ p["Wg"].astype(x.dtype))
+    ww = p["w0"] + jnp.einsum(
+        "btr,rd->btd", jnp.tanh(xw @ p["wA"].astype(x.dtype)), p["wB"].astype(x.dtype)
+    ).astype(jnp.float32)
+    w = jnp.exp(-jnp.exp(ww)).reshape(B, T, H, N)  # decay ∈ (0,1)
+
+    if T == 1 and wkv_state is not None:
+        y, new_state = wkv_step(
+            wkv_state, r[:, 0], k[:, 0], v[:, 0], w[:, 0], p["u"]
+        )
+        y = y[:, None]
+    else:
+        y, new_state = wkv_chunked(
+            r, k, v, w, p["u"], chunk=chunk or 64, init_state=wkv_state
+        )
+    y = _group_norm(y.reshape(B, T, D), p["ln_g"], p["ln_b"], H, N)
+    out = (y * g.astype(jnp.float32)).astype(x.dtype) @ p["Wo"].astype(x.dtype)
+    return out, new_state
+
+
+def _channel_mix(p, x, shifted):
+    xx = shifted - x
+    xk = x + xx * p["cm_mu"][0].astype(x.dtype)
+    xr = x + xx * p["cm_mu"][1].astype(x.dtype)
+    kk = jnp.square(jax.nn.relu(xk @ p["Wck"].astype(x.dtype)))
+    return jax.nn.sigmoid(xr @ p["Wcr"].astype(x.dtype)) * (kk @ p["Wcv"].astype(x.dtype))
+
+
+def _shift(x, last):
+    """shifted[t] = x[t-1]; shifted[0] = last (carried state)."""
+    return jnp.concatenate([last[:, None, :].astype(x.dtype), x[:, :-1, :]], axis=1)
+
+
+def rwkv6_apply(cfg, p, x, *, state=None):
+    """Full block (pre-LN → time-mix → residual → pre-LN → channel-mix →
+    residual).  x: [B, T, D] → (y, new_state{shift_tm, shift_cm, wkv}).
+    The shift states hold the *normed* last token (mixers see LN'd input)."""
+    from .layers import layernorm
+
+    B, T, D = x.shape
+    if state is None:
+        last_tm = jnp.zeros((B, D), x.dtype)
+        last_cm = jnp.zeros((B, D), x.dtype)
+        wkv0 = None
+    else:
+        last_tm, last_cm, wkv0 = state["shift_tm"], state["shift_cm"], state["wkv"]
+    a = layernorm(x, p["ln1_g"], p["ln1_b"])
+    tm, new_wkv = _time_mix(cfg, p, a, _shift(a, last_tm), wkv0, chunk=cfg.ssm_chunk)
+    x = x + tm
+    b = layernorm(x, p["ln2_g"], p["ln2_b"])
+    cm = _channel_mix(p, b, _shift(b, last_cm))
+    y = x + cm
+    new_state = {
+        "shift_tm": a[:, -1, :],
+        "shift_cm": b[:, -1, :],
+        "wkv": new_wkv,
+    }
+    return y, new_state
+
+
+def rwkv6_step(cfg, p, x_t, state):
+    """Single token.  x_t: [B, 1, D]."""
+    from .layers import layernorm
+
+    a = layernorm(x_t, p["ln1_g"], p["ln1_b"])
+    tm, new_wkv = _time_mix(
+        cfg, p, a, state["shift_tm"][:, None, :].astype(x_t.dtype), state["wkv"]
+    )
+    h = x_t + tm
+    b = layernorm(h, p["ln2_g"], p["ln2_b"])
+    cm = _channel_mix(p, b, state["shift_cm"][:, None, :].astype(x_t.dtype))
+    y = h + cm
+    new_state = {
+        "shift_tm": a[:, -1, :],
+        "shift_cm": b[:, -1, :],
+        "wkv": new_wkv,
+    }
+    return y, new_state

@@ -1,0 +1,114 @@
+"""AdamW with global-norm clipping and LR schedules, pure JAX pytrees.
+
+The optimizer state dtype is configurable (``cfg.opt_state_dtype``):
+f32 moments by default, bf16 for the >100B archs where the moment
+memory would not fit HBM — the de-facto large-scale practice.
+
+Distributed-optimization hooks:
+
+* ``grad_transform`` — applied to the gradient pytree *before* the
+  update; used by ``repro.runtime.compression`` to plug in int8 /
+  top-k error-feedback compression of the cross-pod all-reduce.
+* the update is shape-preserving and elementwise, so it shards under
+  whatever PartitionSpec the parameters carry (FSDP-friendly).
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass
+from typing import Callable, NamedTuple, Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = ["AdamW", "OptState", "cosine_schedule", "linear_warmup_cosine"]
+
+
+class OptState(NamedTuple):
+    step: jax.Array  # scalar int32
+    mu: dict  # first moment, like params
+    nu: dict  # second moment, like params
+
+
+def cosine_schedule(base_lr: float, total_steps: int, final_frac: float = 0.1):
+    def lr(step):
+        t = jnp.minimum(step, total_steps) / max(1, total_steps)
+        c = 0.5 * (1 + jnp.cos(jnp.pi * t))
+        return base_lr * (final_frac + (1 - final_frac) * c)
+
+    return lr
+
+
+def linear_warmup_cosine(
+    base_lr: float, warmup: int, total_steps: int, final_frac: float = 0.1
+):
+    cos = cosine_schedule(base_lr, max(1, total_steps - warmup), final_frac)
+
+    def lr(step):
+        warm = base_lr * step / max(1, warmup)
+        return jnp.where(step < warmup, warm, cos(step - warmup))
+
+    return lr
+
+
+@dataclass(frozen=True)
+class AdamW:
+    lr: Callable | float = 3e-4
+    b1: float = 0.9
+    b2: float = 0.95
+    eps: float = 1e-8
+    weight_decay: float = 0.1
+    clip_norm: Optional[float] = 1.0
+    moment_dtype: str = "float32"
+    grad_transform: Optional[Callable] = None  # e.g. compression
+
+    def init(self, params) -> OptState:
+        dt = jnp.dtype(self.moment_dtype)
+        z = lambda p: jnp.zeros(p.shape, dt)
+        return OptState(
+            step=jnp.zeros((), jnp.int32),
+            mu=jax.tree.map(z, params),
+            nu=jax.tree.map(z, params),
+        )
+
+    def _lr(self, step):
+        return self.lr(step) if callable(self.lr) else self.lr
+
+    def update(self, grads, state: OptState, params):
+        """Returns (new_params, new_state, metrics)."""
+        if self.grad_transform is not None:
+            grads = self.grad_transform(grads)
+        gnorm = jnp.sqrt(
+            sum(jnp.sum(jnp.square(g.astype(jnp.float32))) for g in jax.tree.leaves(grads))
+        )
+        if self.clip_norm is not None:
+            scale = jnp.minimum(1.0, self.clip_norm / jnp.maximum(gnorm, 1e-9))
+            grads = jax.tree.map(lambda g: g * scale, grads)
+
+        step = state.step + 1
+        b1, b2 = self.b1, self.b2
+        lr = self._lr(step)
+        bc1 = 1 - b1 ** step.astype(jnp.float32)
+        bc2 = 1 - b2 ** step.astype(jnp.float32)
+        mdt = jnp.dtype(self.moment_dtype)
+
+        def upd(p, g, m, v):
+            g32 = g.astype(jnp.float32)
+            m32 = m.astype(jnp.float32) * b1 + (1 - b1) * g32
+            v32 = v.astype(jnp.float32) * b2 + (1 - b2) * g32 * g32
+            mhat = m32 / bc1
+            vhat = v32 / bc2
+            delta = mhat / (jnp.sqrt(vhat) + self.eps)
+            if p.ndim >= 2:  # decoupled decay on matrices only
+                delta = delta + self.weight_decay * p.astype(jnp.float32)
+            new_p = (p.astype(jnp.float32) - lr * delta).astype(p.dtype)
+            return new_p, m32.astype(mdt), v32.astype(mdt)
+
+        flat_p, tdef = jax.tree.flatten(params)
+        flat_g = jax.tree.leaves(grads)
+        flat_m = jax.tree.leaves(state.mu)
+        flat_v = jax.tree.leaves(state.nu)
+        out = [upd(p, g, m, v) for p, g, m, v in zip(flat_p, flat_g, flat_m, flat_v)]
+        new_p = jax.tree.unflatten(tdef, [o[0] for o in out])
+        new_m = jax.tree.unflatten(tdef, [o[1] for o in out])
+        new_v = jax.tree.unflatten(tdef, [o[2] for o in out])
+        return new_p, OptState(step, new_m, new_v), {"grad_norm": gnorm, "lr": lr}

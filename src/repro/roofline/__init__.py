@@ -1,0 +1,18 @@
+"""repro.roofline — three-term roofline from compiled dry-run artifacts."""
+from .analysis import (
+    HW,
+    CollectiveStats,
+    analyze_compiled,
+    collective_bytes,
+    model_flops,
+    roofline_terms,
+)
+
+__all__ = [
+    "HW",
+    "CollectiveStats",
+    "analyze_compiled",
+    "collective_bytes",
+    "model_flops",
+    "roofline_terms",
+]

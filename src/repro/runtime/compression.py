@@ -1,0 +1,87 @@
+"""Gradient compression for the cross-pod (DCI) all-reduce axis.
+
+On a multi-pod mesh the ``pod`` axis crosses data-center interconnect at
+a fraction of ICI bandwidth; compressing the DP gradient all-reduce on
+that axis is the standard lever.  Two transforms, both usable as
+``AdamW(grad_transform=...)`` (they compress+decompress locally — in the
+compiled program the *compressed* representation is what crosses the pod
+axis; see ``launch/train.py: cross_pod_psum_compressed``):
+
+* **int8 stochastic-rounding quantization** — 4× wire reduction, unbiased.
+* **top-k with error feedback** — keeps the k largest-|g| entries per
+  leaf, accumulating the residual locally (Stich et al.); sparsity ~99%.
+"""
+from __future__ import annotations
+
+from functools import partial
+from typing import Optional
+
+import jax
+import jax.numpy as jnp
+
+__all__ = [
+    "int8_quantize",
+    "int8_dequantize",
+    "int8_compress_transform",
+    "topk_ef_transform",
+]
+
+
+def int8_quantize(g: jax.Array, key: Optional[jax.Array] = None):
+    """Per-tensor symmetric int8 with optional stochastic rounding."""
+    scale = jnp.maximum(jnp.max(jnp.abs(g)), 1e-12) / 127.0
+    x = g / scale
+    if key is not None:
+        noise = jax.random.uniform(key, g.shape, minval=-0.5, maxval=0.5)
+        x = x + noise
+    q = jnp.clip(jnp.round(x), -127, 127).astype(jnp.int8)
+    return q, scale.astype(jnp.float32)
+
+
+def int8_dequantize(q: jax.Array, scale: jax.Array) -> jax.Array:
+    return q.astype(jnp.float32) * scale
+
+
+def int8_compress_transform(seed: int = 0):
+    """Round-trip int8 transform (models the wire quantization error)."""
+
+    def transform(grads):
+        leaves, tdef = jax.tree.flatten(grads)
+        keys = jax.random.split(jax.random.PRNGKey(seed), len(leaves))
+        out = []
+        for g, k in zip(leaves, keys):
+            q, s = int8_quantize(g.astype(jnp.float32), k)
+            out.append(int8_dequantize(q, s).astype(g.dtype))
+        return jax.tree.unflatten(tdef, out)
+
+    return transform
+
+
+def topk_ef_transform(k_frac: float = 0.01):
+    """Top-k sparsification with error feedback.  Stateful: returns
+    (transform, init_state) — the residual pytree must be threaded by the
+    caller (see launch/train.py)."""
+
+    def init_state(grads):
+        return jax.tree.map(lambda g: jnp.zeros_like(g, jnp.float32), grads)
+
+    def transform(grads, residual):
+        def one(g, r):
+            x = g.astype(jnp.float32) + r
+            flat = x.reshape(-1)
+            k = max(1, int(flat.size * k_frac))
+            thresh = jax.lax.top_k(jnp.abs(flat), k)[0][-1]
+            mask = (jnp.abs(x) >= thresh).astype(jnp.float32)
+            sent = x * mask
+            new_r = x - sent
+            return sent.astype(g.dtype), new_r
+
+        flat_g, tdef = jax.tree.flatten(grads)
+        flat_r = jax.tree.leaves(residual)
+        pairs = [one(g, r) for g, r in zip(flat_g, flat_r)]
+        return (
+            jax.tree.unflatten(tdef, [p[0] for p in pairs]),
+            jax.tree.unflatten(tdef, [p[1] for p in pairs]),
+        )
+
+    return transform, init_state

@@ -1,0 +1,7 @@
+import os
+
+# Tests see the single real CPU device (the dry-run sets its own flag in
+# a separate process).  Some sharding tests need a few fake devices; they
+# spawn subprocesses (see test_collectives.py) rather than polluting this
+# process's jax config.
+os.environ.setdefault("JAX_PLATFORMS", "cpu")

@@ -1,0 +1,113 @@
+"""Unit + property tests for the block decomposition (paper §5.2)."""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core.blocks import (
+    Layout,
+    OperandSpec,
+    ViewSpec,
+    default_process_grid,
+    fragment_iteration_space,
+)
+
+
+def test_default_process_grid():
+    assert default_process_grid(16, 2) == (4, 4)
+    assert default_process_grid(8, 2) in ((4, 2), (2, 4))
+    assert np.prod(default_process_grid(12, 3)) == 12
+    assert default_process_grid(1, 2) == (1, 1)
+
+
+def test_layout_owner_block_cyclic():
+    lay = Layout((8, 8), (2, 2), (2, 2))
+    owners = {coord: lay.owner(coord) for coord, _ in lay.blocks()}
+    # round-robin per dim: owner = (bi % 2) * 2 + (bj % 2)
+    for (bi, bj), r in owners.items():
+        assert r == (bi % 2) * 2 + (bj % 2)
+    assert set(owners.values()) == {0, 1, 2, 3}
+
+
+def test_view_compose_slice():
+    v = ViewSpec.full((10, 10))
+    v2 = v.compose_slice((slice(2, 8), slice(0, 10, 2)))
+    assert v2.vshape == (6, 5)
+    assert v2.offset == (2, 0)
+    assert v2.step == (1, 2)
+    v3 = v2.compose_slice((slice(1, 4), slice(1, 5)))
+    assert v3.offset == (3, 2)
+    assert v3.step == (1, 2)
+    assert v3.vshape == (3, 4)
+
+
+def _np_of_fragments(shape, view, layout):
+    """Reassemble a view through its fragments and compare with numpy."""
+    base = np.arange(int(np.prod(shape))).reshape(shape)
+    spec = OperandSpec(view, layout, tuple(range(view.ndim)))
+    out = np.full(view.vshape, -1, dtype=base.dtype)
+    for vint, (frag,) in fragment_iteration_space(view.vshape, (spec,)):
+        dst = tuple(slice(lo, hi) for lo, hi in vint)
+        blk = base[layout.block_slices(frag.block)]
+        out[dst] = blk[frag.slices]
+    # oracle: strided view
+    key = tuple(
+        slice(o, o + (L - 1) * s + 1, s)
+        for o, s, L in zip(view.offset, view.step, view.vshape)
+    )
+    np.testing.assert_array_equal(out, base[key])
+
+
+@settings(max_examples=60, deadline=None)
+@given(
+    n=st.integers(4, 40),
+    m=st.integers(4, 40),
+    bs=st.integers(1, 9),
+    off=st.integers(0, 3),
+    step=st.integers(1, 3),
+)
+def test_fragmentation_covers_view_exactly(n, m, bs, off, step):
+    shape = (n, m)
+    lay = Layout(shape, (bs, bs), (2, 2))
+    L1 = max(1, (n - off + step - 1) // step - 1)
+    L2 = max(1, (m - off + step - 1) // step - 1)
+    view = ViewSpec((off, off), (step, step), (L1, L2))
+    _np_of_fragments(shape, view, lay)
+
+
+@settings(max_examples=30, deadline=None)
+@given(
+    n=st.integers(4, 32),
+    bs_a=st.integers(1, 8),
+    bs_b=st.integers(1, 8),
+)
+def test_fragments_single_block_invariant(n, bs_a, bs_b):
+    """Every fragment must touch exactly one base-block of each operand."""
+    lay_a = Layout((n, n), (bs_a, bs_a), (2, 2))
+    lay_b = Layout((n, n), (bs_b, bs_b), (2, 2))
+    va = ViewSpec.full((n, n))
+    specs = (
+        OperandSpec(va, lay_a, (0, 1)),
+        OperandSpec(va, lay_b, (0, 1)),
+    )
+    frags = fragment_iteration_space((n, n), specs)
+    total = 0
+    for vint, (fa, fb) in frags:
+        size = int(np.prod([hi - lo for lo, hi in vint]))
+        total += size
+        assert fa.size == size and fb.size == size
+    assert total == n * n
+
+
+def test_matmul_fragmentation_shapes():
+    M = N = K = 12
+    lay = Layout((M, K), (4, 4), (2, 2))
+    specs = (
+        OperandSpec(ViewSpec.full((M, N)), lay, (0, 1)),
+        OperandSpec(ViewSpec.full((M, K)), lay, (0, 2)),
+        OperandSpec(ViewSpec.full((K, N)), lay, (2, 1)),
+    )
+    frags = fragment_iteration_space((M, N, K), specs)
+    vol = sum(
+        int(np.prod([hi - lo for lo, hi in vint])) for vint, _ in frags
+    )
+    assert vol == M * N * K

@@ -1,0 +1,168 @@
+"""DistArray API vs NumPy oracle — including property-based equivalence.
+
+The central invariant of the whole runtime (paper §5): ANY program
+written against the DistArray API must produce bit-identical results to
+NumPy, for every block size, process count, scheduling mode, and with
+fusion on or off.
+"""
+import numpy as np
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import Runtime
+from repro.core import darray as dnp
+
+
+def run_program(prog, mode="latency_hiding", nprocs=4, block_size=3, fusion=False):
+    with Runtime(nprocs=nprocs, block_size=block_size, mode=mode, fusion=fusion):
+        return np.asarray(prog(dnp))  # materialize inside the context
+
+
+def np_program(prog):
+    class NpShim:
+        array = staticmethod(lambda d, **k: np.array(d, dtype=float))
+        zeros = staticmethod(lambda s, **k: np.zeros(s))
+        ones = staticmethod(lambda s, **k: np.ones(s))
+        empty = staticmethod(lambda s, **k: np.zeros(s))
+        exp = staticmethod(np.exp)
+        log = staticmethod(np.log)
+        sqrt = staticmethod(np.sqrt)
+        absolute = staticmethod(np.absolute)
+        maximum = staticmethod(np.maximum)
+        minimum = staticmethod(np.minimum)
+        where = staticmethod(np.where)
+        less = staticmethod(lambda a, b: np.less(a, b).astype(float))
+        greater = staticmethod(lambda a, b: np.greater(a, b).astype(float))
+        matmul = staticmethod(
+            lambda a, b, trans_a=False, trans_b=False: (a.T if trans_a else a)
+            @ (b.T if trans_b else b)
+        )
+        roll = staticmethod(np.roll)
+
+    return prog(NpShim)
+
+
+PROGRAMS = {
+    "elementwise_views": lambda m: (
+        lambda a: (a[1:] * 2.0 + a[:-1]) / (1.0 + m.exp(-a[1:]))
+    )(m.array(np.arange(37.0))),
+    "stencil": lambda m: (
+        lambda f: [
+            f.__setitem__(
+                (slice(1, -1), slice(1, -1)),
+                0.2 * (f[1:-1, 1:-1] + f[:-2, 1:-1] + f[2:, 1:-1]
+                       + f[1:-1, :-2] + f[1:-1, 2:]),
+            )
+            or f
+            for _ in range(3)
+        ][-1]
+    )(m.array(np.arange(121.0).reshape(11, 11))),
+    "reduce": lambda m: (lambda a: a.sum(axis=0) + a.max(axis=0))(
+        m.array(np.arange(56.0).reshape(7, 8))
+    ),
+    "matmul": lambda m: m.matmul(
+        m.array(np.arange(30.0).reshape(5, 6)),
+        m.array(np.arange(30.0).reshape(6, 5)),
+    ),
+    "matmul_trans": lambda m: m.matmul(
+        m.array(np.arange(30.0).reshape(6, 5)),
+        m.array(np.arange(30.0).reshape(6, 5)),
+        trans_a=True,
+    ),
+    "roll": lambda m: m.roll(m.array(np.arange(24.0).reshape(4, 6)), 2, 1),
+    "broadcast": lambda m: m.array(np.arange(20.0).reshape(4, 5))
+    * m.array(np.arange(5.0).reshape(1, 5))
+    + m.array(np.arange(4.0).reshape(4, 1)),
+}
+
+
+@pytest.mark.parametrize("name", list(PROGRAMS))
+@pytest.mark.parametrize("mode", ["latency_hiding", "blocking"])
+def test_programs_match_numpy(name, mode):
+    prog = PROGRAMS[name]
+    got = np.asarray(run_program(prog, mode=mode))
+    want = np.asarray(np_program(prog))
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+@pytest.mark.parametrize("name", list(PROGRAMS))
+def test_programs_match_numpy_fused(name):
+    got = np.asarray(run_program(PROGRAMS[name], fusion=True))
+    want = np.asarray(np_program(PROGRAMS[name]))
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+@settings(max_examples=40, deadline=None)
+@given(
+    n=st.integers(3, 24),
+    bs=st.integers(1, 9),
+    nprocs=st.sampled_from([1, 2, 4, 7]),
+    lo=st.integers(0, 2),
+    step=st.integers(1, 2),
+    mode=st.sampled_from(["latency_hiding", "blocking"]),
+    seed=st.integers(0, 99),
+)
+def test_property_view_arithmetic(n, bs, nprocs, lo, step, mode, seed):
+    """Random strided-view expression == NumPy, any layout/schedule."""
+    rng = np.random.default_rng(seed)
+    a_np = rng.random((n, n))
+    b_np = rng.random((n, n))
+    key = (slice(lo, n, step), slice(0, n - lo))
+
+    def prog(m):
+        a = m.array(a_np)
+        b = m.array(b_np)
+        x = a[key]
+        y = b[: x.shape[0], : x.shape[1]]
+        return x * 2.0 + y * y - x / (y + 1.5)
+
+    with Runtime(nprocs=nprocs, block_size=bs, mode=mode):
+        got = np.asarray(prog(dnp))
+    want = np_program(prog)
+    np.testing.assert_allclose(got, want, rtol=1e-12)
+
+
+@settings(max_examples=20, deadline=None)
+@given(
+    m=st.integers(2, 12),
+    k=st.integers(2, 12),
+    n=st.integers(2, 12),
+    bs=st.integers(2, 7),
+    seed=st.integers(0, 99),
+)
+def test_property_matmul(m, k, n, bs, seed):
+    rng = np.random.default_rng(seed)
+    a_np = rng.random((m, k))
+    b_np = rng.random((k, n))
+    with Runtime(nprocs=4, block_size=bs):
+        got = np.asarray(dnp.matmul(dnp.array(a_np), dnp.array(b_np)))
+    np.testing.assert_allclose(got, a_np @ b_np, rtol=1e-10)
+
+
+def test_overlapping_self_assignment():
+    a_np = np.arange(20.0)
+    with Runtime(nprocs=4, block_size=3):
+        a = dnp.array(a_np)
+        a[1:] = a[:-1]
+        got = np.asarray(a)
+    want = a_np.copy()
+    want[1:] = a_np[:-1]
+    np.testing.assert_array_equal(got, want)
+
+
+def test_flush_threshold_triggers():
+    with Runtime(nprocs=2, block_size=4, flush_threshold=10) as rt:
+        a = dnp.zeros((8, 8))
+        for _ in range(30):
+            a += 1.0
+        assert rt.flush_count >= 2  # threshold flushes happened mid-stream
+        got = np.asarray(a)
+    np.testing.assert_array_equal(got, np.full((8, 8), 30.0))
+
+
+def test_scalar_readback_triggers_flush():
+    with Runtime(nprocs=2, block_size=4) as rt:
+        a = dnp.ones((6, 6))
+        s = (a + 1.0).sum()
+        assert float(s) == 72.0
+        assert rt.flush_count >= 1

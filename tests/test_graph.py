@@ -1,0 +1,128 @@
+"""Dependency-system tests: heuristic vs full-DAG equivalence (§5.7)."""
+import itertools
+import random
+
+import pytest
+from hypothesis import given, settings, strategies as st
+
+from repro.core import (
+    COMM,
+    COMPUTE,
+    AccessNode,
+    DependencySystem,
+    FullDAG,
+    OperationNode,
+)
+
+
+def _op(kind, writes, reads, uid_order):
+    op = OperationNode(kind, None, procs=(0,), cost=1.0)
+    for key, region in writes:
+        op.add_access(AccessNode(key, region, write=True))
+    for key, region in reads:
+        op.add_access(AccessNode(key, region, write=False))
+    uid_order.append(op.uid)
+    return op
+
+
+def _drain_order(sys_):
+    order = []
+    while True:
+        op = sys_.pop_ready()
+        if op is None:
+            break
+        order.append(op.uid)
+        sys_.complete(op)
+    return order
+
+
+def test_raw_conflicts_serialize():
+    order = []
+    d = DependencySystem()
+    a = _op(COMPUTE, [(("b", 0), ((0, 4),))], [], order)  # write b0[0:4]
+    b = _op(COMPUTE, [], [(("b", 0), ((2, 6),))], order)  # read overlap
+    c = _op(COMPUTE, [], [(("b", 0), ((4, 8),))], order)  # read disjoint
+    for op in (a, b, c):
+        d.insert(op)
+    ready0 = {op.uid for op in d.ready}
+    assert a.uid in ready0 and c.uid in ready0 and b.uid not in ready0
+    got = _drain_order(d)
+    assert got.index(a.uid) < got.index(b.uid)
+
+
+def test_read_read_no_conflict():
+    order = []
+    d = DependencySystem()
+    ops = [_op(COMPUTE, [], [(("b", 0), ((0, 8),))], order) for _ in range(5)]
+    for op in ops:
+        d.insert(op)
+    assert len(d.ready) == 5
+
+
+def _random_program(rng, n_ops, n_blocks):
+    """Random op stream over a few blocks with region-level conflicts."""
+    ops = []
+    for _ in range(n_ops):
+        writes, reads = [], []
+        for _ in range(rng.randint(1, 2)):
+            key = ("b", rng.randrange(n_blocks))
+            lo = rng.randrange(0, 8)
+            region = ((lo, lo + rng.randint(1, 4)),)
+            if rng.random() < 0.5:
+                writes.append((key, region))
+            else:
+                reads.append((key, region))
+        ops.append((writes, reads))
+    return ops
+
+
+@settings(max_examples=25, deadline=None)
+@given(seed=st.integers(0, 10_000), n_ops=st.integers(2, 40))
+def test_heuristic_matches_full_dag(seed, n_ops):
+    """Property (paper §5.7.2): the per-block dependency-list heuristic
+    must admit exactly the schedules the full DAG admits — same ready
+    sets at every step when draining in uid order."""
+    rng = random.Random(seed)
+    prog = _random_program(rng, n_ops, n_blocks=3)
+
+    def build(cls):
+        order = []
+        s = cls()
+        id_map = {}
+        for writes, reads in prog:
+            op = _op(COMPUTE, writes, reads, order)
+            id_map[op.uid] = op
+            s.insert(op)
+        return s, order, id_map
+
+    h, order_h, map_h = build(DependencySystem)
+    g, order_g, map_g = build(FullDAG)
+    # drain both in deterministic (uid ascending) order, comparing ready sets
+    pos_h = {uid: i for i, uid in enumerate(order_h)}
+    pos_g = {uid: i for i, uid in enumerate(order_g)}
+    while True:
+        ready_h = sorted(pos_h[op.uid] for op in h.ready if not op.executed)
+        ready_g = sorted(pos_g[op.uid] for op in g.ready if not op.executed)
+        assert ready_h == ready_g
+        if not ready_h:
+            break
+        # complete the lowest-index ready op in both
+        tgt_h = min((op for op in h.ready if not op.executed), key=lambda o: pos_h[o.uid])
+        tgt_g = min((op for op in g.ready if not op.executed), key=lambda o: pos_g[o.uid])
+        h.ready.remove(tgt_h)
+        g.ready.remove(tgt_g)
+        h.complete(tgt_h)
+        g.complete(tgt_g)
+    assert h.done and g.n_pending == 0
+
+
+def test_comm_priority_pop():
+    order = []
+    d = DependencySystem()
+    c1 = _op(COMPUTE, [(("b", 1), None)], [], order)
+    m1 = _op(COMM, [(("s", 1), None)], [], order)
+    d.insert(c1)
+    d.insert(m1)
+    assert d.pop_ready(COMM) is m1
+    assert d.pop_ready(COMM) is None
+    assert d.pop_ready(COMPUTE) is c1

@@ -1,0 +1,110 @@
+"""Per-kernel shape/dtype sweeps against the pure-jnp oracles
+(interpret mode on CPU)."""
+import jax
+import jax.numpy as jnp
+import pytest
+
+from repro.kernels.flash_attention import flash_attention, flash_attention_ref
+from repro.kernels.mamba2_scan import ssd_scan, ssd_scan_ref
+from repro.kernels.rwkv6_wkv import wkv6, wkv6_ref
+from repro.kernels.stencil import jacobi_sweep, jacobi_sweep_ref
+
+TOL = {jnp.float32: 5e-4, jnp.bfloat16: 5e-2}
+
+
+@pytest.mark.parametrize("B,Sq,Sk,H,KV,d", [
+    (1, 128, 128, 2, 2, 64),
+    (2, 130, 130, 4, 2, 64),     # padding path
+    (1, 64, 192, 2, 1, 80),      # cross-length + non-128 head dim
+    (1, 96, 96, 4, 4, 128),
+])
+@pytest.mark.parametrize("dtype", [jnp.float32, jnp.bfloat16])
+def test_flash_attention_shapes(B, Sq, Sk, H, KV, d, dtype):
+    ks = jax.random.split(jax.random.PRNGKey(0), 3)
+    q = jax.random.normal(ks[0], (B, Sq, H, d), dtype)
+    k = jax.random.normal(ks[1], (B, Sk, KV, d), dtype)
+    v = jax.random.normal(ks[2], (B, Sk, KV, d), dtype)
+    got = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v, causal=True)
+    err = jnp.abs(got.astype(jnp.float32) - ref.astype(jnp.float32)).max()
+    assert err < TOL[dtype], err
+
+
+@pytest.mark.parametrize("causal,window", [(True, None), (False, None), (True, 37)])
+def test_flash_attention_masks(causal, window):
+    ks = jax.random.split(jax.random.PRNGKey(1), 3)
+    q = jax.random.normal(ks[0], (1, 256, 2, 64))
+    k = jax.random.normal(ks[1], (1, 256, 2, 64))
+    v = jax.random.normal(ks[2], (1, 256, 2, 64))
+    got = flash_attention(q, k, v, causal=causal, window=window, block_q=64, block_k=64)
+    ref = flash_attention_ref(q, k, v, causal=causal, window=window)
+    assert jnp.abs(got - ref).max() < 5e-4
+
+
+@pytest.mark.parametrize("b,s,h,p,n,chunk", [
+    (2, 64, 3, 16, 8, 16),
+    (1, 100, 2, 32, 16, 32),   # padding path
+    (1, 256, 1, 64, 64, 128),
+])
+@pytest.mark.parametrize("with_state", [False, True])
+def test_ssd_scan_shapes(b, s, h, p, n, chunk, with_state):
+    ks = jax.random.split(jax.random.PRNGKey(2), 6)
+    x = jax.random.normal(ks[0], (b, s, h, p))
+    dt = jax.nn.softplus(jax.random.normal(ks[1], (b, s, h)))
+    A = -jnp.exp(jax.random.normal(ks[2], (h,)) * 0.5)
+    B = jax.random.normal(ks[3], (b, s, n))
+    C = jax.random.normal(ks[4], (b, s, n))
+    s0 = jax.random.normal(ks[5], (b, h, p, n)) if with_state else None
+    y, fin = ssd_scan(x, dt, A, B, C, s0, chunk=chunk)
+    yr, fr = ssd_scan_ref(x, dt, A, B, C, init_state=s0)
+    assert jnp.abs(y - yr).max() < 2e-3
+    assert jnp.abs(fin - fr).max() < 2e-3
+
+
+@pytest.mark.parametrize("B,T,H,N,chunk", [
+    (2, 64, 3, 16, 16),
+    (1, 100, 2, 32, 32),   # padding path
+    (1, 128, 2, 64, 64),
+])
+@pytest.mark.parametrize("with_state", [False, True])
+def test_wkv6_shapes(B, T, H, N, chunk, with_state):
+    ks = jax.random.split(jax.random.PRNGKey(3), 6)
+    r, k, v = [jax.random.normal(ks[i], (B, T, H, N)) for i in range(3)]
+    w = jax.nn.sigmoid(jax.random.normal(ks[3], (B, T, H, N))) * 0.55 + 0.4
+    u = jax.random.normal(ks[4], (H, N))
+    s0 = jax.random.normal(ks[5], (B, H, N, N)) if with_state else None
+    y, fin = wkv6(r, k, v, w, u, s0, chunk=chunk)
+    yr, fr = wkv6_ref(r, k, v, w, u, init_state=s0)
+    assert jnp.abs(y - yr).max() < 1e-3
+    assert jnp.abs(fin - fr).max() < 1e-3
+
+
+@pytest.mark.parametrize("H,W,band", [
+    (128, 256, 32), (100, 64, 32), (64, 64, 64), (96, 128, 128),
+])
+def test_jacobi_sweep_shapes(H, W, band):
+    x = jax.random.normal(jax.random.PRNGKey(4), (H, W))
+    got = jacobi_sweep(x, band=band)
+    ref = jacobi_sweep_ref(x)
+    assert jnp.abs(got - ref).max() < 1e-6
+
+
+def test_jacobi_sweep_iterated():
+    x = jax.random.normal(jax.random.PRNGKey(5), (96, 96))
+    a = b = x
+    for _ in range(4):
+        a = jacobi_sweep(a, band=32)
+        b = jacobi_sweep_ref(b)
+    assert jnp.abs(a - b).max() < 1e-6
+
+
+def test_kernels_match_model_paths():
+    """Kernel outputs == the model-substrate jnp twins (chunked paths)."""
+    from repro.models.attention import chunked_attention
+    ks = jax.random.split(jax.random.PRNGKey(6), 3)
+    q = jax.random.normal(ks[0], (2, 128, 4, 64))
+    k = jax.random.normal(ks[1], (2, 128, 2, 64))
+    v = jax.random.normal(ks[2], (2, 128, 2, 64))
+    a = flash_attention(q, k, v, causal=True, block_q=64, block_k=64)
+    b = chunked_attention(q, k, v, causal=True, chunk=64)
+    assert jnp.abs(a - b).max() < 5e-4
