@@ -264,6 +264,10 @@ def run_app(
     execute: bool = True,
     fusion: bool = False,
     cluster=GIGE_2012,
+    flush_backend: str = "sim",
+    exec_backend: str = "numpy",
+    exec_channel=None,
+    exec_latency: float = 0.0,
     **kw,
 ):
     fn, defaults, default_bs = APPS[name]
@@ -276,6 +280,10 @@ def run_app(
         cluster=cluster,
         execute=execute,
         fusion=fusion,
+        flush_backend=flush_backend,
+        exec_backend=exec_backend,
+        exec_channel=exec_channel,
+        exec_latency=exec_latency,
     ) as rt:
         out = fn(**kwargs)
         result = np.asarray(out) if execute else None

@@ -137,22 +137,14 @@ class Expr:
             return out
 
         def run(*arrays):
-            def ev(node):
-                tag = node[0]
-                if tag == "leaf":
-                    return arrays[node[1]]
-                if tag == "const":
-                    return node[1]
-                f, subs = node
-                return f(*[ev(s) for s in subs])
-
-            return ev(spec)
+            return uf.eval_tree(spec, arrays, lambda u: u.fn)
 
         fused = UFunc(
             name=f"fused[{self.ufunc.name}x{len(leaves)}]",
             fn=run,
             nin=len(leaves),
             cost=self.fused_cost(len(leaves)),
+            tree=spec,
         )
         if out is None:
             out = empty(self.shape, dtype=self.dtype)

@@ -36,7 +36,13 @@ from .scheduler import run_schedule
 from .timeline import GIGE_2012, ClusterSpec, TimelineResult
 from .ufunc import UFunc, get_ufunc, reduce_fn
 
-__all__ = ["Runtime", "ArrayBase", "current_runtime"]
+__all__ = [
+    "Runtime",
+    "ArrayBase",
+    "current_runtime",
+    "execute_payload",
+    "resolve_ref",
+]
 
 _base_ids = itertools.count(1)
 _scratch_ids = itertools.count(1)
@@ -111,6 +117,73 @@ class FillPayload:
     value: object
 
 
+# ---------------------------------------------------------------------------
+# Payload interpretation — shared by the simulated executor (run_schedule's
+# ``executor`` callback) and the asynchronous executor in repro.exec.  It is
+# deliberately a pure function of (payload, storage, scratch): any executor
+# that respects the dependency graph's ordering of conflicting accesses
+# produces bit-identical block contents through it.
+# ---------------------------------------------------------------------------
+
+
+def resolve_ref(ref, storage: dict, scratch: dict):
+    """Input reference -> ndarray: ("b", base, frag) block piece,
+    ("s", sid) scratch buffer, ("c", const) scalar."""
+    kind = ref[0]
+    if kind == "b":
+        _, bid, frag = ref
+        return storage[(bid, frag.block)][frag.slices]
+    if kind == "s":
+        return scratch[ref[1]]
+    return ref[1]  # constant
+
+
+def execute_payload(p, storage: dict, scratch: dict) -> None:
+    """Execute one operation payload against block/scratch storage."""
+    if isinstance(p, TransferPayload):
+        # always materialize a copy: the wire transfer must snapshot the
+        # source at send time (an aliasing view would see later writes)
+        scratch[p.dst_scratch] = np.array(
+            resolve_ref(p.src, storage, scratch), copy=True
+        )
+    elif isinstance(p, MapPayload):
+        args = [resolve_ref(r, storage, scratch) for r in p.args]
+        res = p.ufunc(*args)
+        blk = storage[(p.out_base, p.out_frag.block)]
+        blk[p.out_frag.slices] = res
+    elif isinstance(p, ReducePartialPayload):
+        arr = resolve_ref(p.src, storage, scratch)
+        scratch[p.dst_scratch] = reduce_fn(p.ufunc_name)(
+            arr, axis=p.axes if p.axes else None, keepdims=p.keepdims
+        )
+    elif isinstance(p, CombinePayload):
+        part = scratch[p.src_scratch]
+        blk = storage[(p.out_base, p.out_frag.block)]
+        if p.init:
+            blk[p.out_frag.slices] = part
+        else:
+            cur = blk[p.out_frag.slices]
+            blk[p.out_frag.slices] = get_ufunc(p.ufunc_name)(cur, part)
+    elif isinstance(p, MatmulPayload):
+        a = resolve_ref(p.a, storage, scratch)
+        b = resolve_ref(p.b, storage, scratch)
+        if p.trans_a:
+            a = a.T
+        if p.trans_b:
+            b = b.T
+        val = a @ b
+        blk = storage[(p.out_base, p.out_frag.block)]
+        if p.init:
+            blk[p.out_frag.slices] = val
+        else:
+            blk[p.out_frag.slices] += val
+    elif isinstance(p, FillPayload):
+        blk = storage[(p.out_base, p.out_frag.block)]
+        blk[p.out_frag.slices] = p.value
+    else:  # pragma: no cover
+        raise TypeError(f"unknown payload {type(p)}")
+
+
 class ArrayBase:
     """The array-base (paper §5.1): owns the actual memory via the runtime's
     block storage; never manipulated directly by the user."""
@@ -139,6 +212,11 @@ class Runtime:
         flush_threshold: int = 200_000,
         execute: bool = True,
         fusion: bool = False,
+        flush_backend: str = "sim",
+        exec_backend: str = "numpy",
+        exec_channel: Optional[str] = None,
+        exec_latency: Union[float, str] = 0.0,  # seconds, or "alpha"
+        exec_progress_threads: int = 2,
     ):
         self.nprocs = nprocs
         self.block_size = block_size
@@ -147,6 +225,42 @@ class Runtime:
         self.flush_threshold = flush_threshold
         self.execute = execute
         self.fusion = fusion
+        if flush_backend not in ("sim", "async"):
+            raise ValueError(f"unknown flush_backend {flush_backend!r} (sim|async)")
+        if flush_backend == "async" and not execute:
+            raise ValueError("flush_backend='async' requires execute=True "
+                             "(it runs the real block work)")
+        self.flush_backend = flush_backend
+        self.exec_backend = exec_backend
+        # channel discipline defaults to the runtime mode: latency-hiding
+        # uses the non-blocking progress engine, blocking the sync channel
+        self.exec_channel = exec_channel or (
+            "async" if mode == "latency_hiding" else "blocking"
+        )
+        if flush_backend == "async":
+            # fail at construction, not at the first flush mid-program
+            from repro.exec.backend import _BACKENDS
+
+            if exec_backend not in _BACKENDS:
+                raise ValueError(
+                    f"unknown exec_backend {exec_backend!r} "
+                    f"(expected one of {sorted(_BACKENDS)})"
+                )
+            if self.exec_channel not in ("async", "blocking"):
+                raise ValueError(
+                    f"unknown exec_channel {self.exec_channel!r} (async|blocking)"
+                )
+        if isinstance(exec_latency, str):
+            from repro.comm.emulation import resolve_latency
+
+            exec_latency = resolve_latency(exec_latency, self.cluster)
+        self.exec_latency = exec_latency
+        self.exec_progress_threads = exec_progress_threads
+        self.exec_stats = None  # WaitStats accumulated across async flushes
+        # compute backend + channel persist across flushes (jit caches and
+        # progress threads are expensive to rebuild); created lazily
+        self._exec_backend_obj = None
+        self._exec_channel_obj = None
 
         self.deps = DependencySystem()
         self.storage: dict[tuple, np.ndarray] = {}  # (base_id, coord) -> block
@@ -169,9 +283,15 @@ class Runtime:
         return self
 
     def __exit__(self, exc_type, exc, tb):
-        if exc_type is None:
-            self.flush()  # §5.6 trigger 3: end of program
-        _tls.runtime = None
+        try:
+            if exc_type is None:
+                self.flush()  # §5.6 trigger 3: end of program
+        finally:
+            _tls.runtime = None
+            if self._exec_channel_obj is not None:
+                self._exec_channel_obj.close()
+                self._exec_channel_obj = None
+                self._exec_backend_obj = None
         return False
 
     # -- array creation -------------------------------------------------------
@@ -483,69 +603,29 @@ class Runtime:
 
     # -- execution backend ------------------------------------------------
     def _resolve(self, ref):
-        kind = ref[0]
-        if kind == "b":
-            _, bid, frag = ref
-            return self.storage[(bid, frag.block)][frag.slices]
-        if kind == "s":
-            return self.scratch[ref[1]]
-        return ref[1]  # constant
+        return resolve_ref(ref, self.storage, self.scratch)
 
     def _execute(self, op: OperationNode) -> None:
-        p = op.payload
-        if isinstance(p, TransferPayload):
-            # always materialize a copy: the wire transfer must snapshot the
-            # source at send time (an aliasing view would see later writes)
-            self.scratch[p.dst_scratch] = np.array(self._resolve(p.src), copy=True)
-        elif isinstance(p, MapPayload):
-            args = [self._resolve(r) for r in p.args]
-            res = p.ufunc(*args)
-            blk = self.storage[(p.out_base, p.out_frag.block)]
-            blk[p.out_frag.slices] = res
-        elif isinstance(p, ReducePartialPayload):
-            arr = self._resolve(p.src)
-            self.scratch[p.dst_scratch] = reduce_fn(p.ufunc_name)(
-                arr, axis=p.axes if p.axes else None, keepdims=p.keepdims
-            )
-        elif isinstance(p, CombinePayload):
-            part = self.scratch[p.src_scratch]
-            blk = self.storage[(p.out_base, p.out_frag.block)]
-            if p.init:
-                blk[p.out_frag.slices] = part
-            else:
-                cur = blk[p.out_frag.slices]
-                blk[p.out_frag.slices] = get_ufunc(p.ufunc_name)(cur, part)
-        elif isinstance(p, MatmulPayload):
-            a = self._resolve(p.a)
-            b = self._resolve(p.b)
-            if p.trans_a:
-                a = a.T
-            if p.trans_b:
-                b = b.T
-            val = a @ b
-            blk = self.storage[(p.out_base, p.out_frag.block)]
-            if p.init:
-                blk[p.out_frag.slices] = val
-            else:
-                blk[p.out_frag.slices] += val
-        elif isinstance(p, FillPayload):
-            blk = self.storage[(p.out_base, p.out_frag.block)]
-            blk[p.out_frag.slices] = p.value
-        else:  # pragma: no cover
-            raise TypeError(f"unknown payload {type(p)}")
+        execute_payload(op.payload, self.storage, self.scratch)
 
     # -- flush (§5.6/§5.7) ----------------------------------------------------
-    def flush(self) -> Optional[TimelineResult]:
+    def flush(self):
+        """Drain the recorded dependency system.  Returns the per-flush
+        stats object: a :class:`TimelineResult` under the simulated
+        backend, a :class:`repro.exec.WaitStats` under the async one."""
         if self.deps.n_pending == 0:
             self._purge_dead()
             return None
-        res = run_schedule(
-            self.deps,
-            self.cluster,
-            mode=self.mode,
-            executor=self._execute if self.execute else None,
-        )
-        self.result.merge(res)
+        if self.flush_backend == "async":
+            res = self._flush_async()
+        else:
+            res = run_schedule(
+                self.deps,
+                self.cluster,
+                mode=self.mode,
+                executor=self._execute if self.execute else None,
+            )
+            self.result.merge(res)
         self.flush_count += 1
         self._recorded_since_flush = 0
         self.scratch.clear()
@@ -553,6 +633,41 @@ class Runtime:
         self._combine_seen.clear()
         self._purge_dead()
         return res
+
+    def _flush_async(self):
+        """Drain through the real multi-worker executor (repro.exec)."""
+        from repro.exec import AsyncExecutor, make_backend, make_channel
+
+        if self._exec_backend_obj is None:
+            self._exec_backend_obj = make_backend(
+                self.exec_backend, self.storage, self.scratch
+            )
+            self._exec_channel_obj = make_channel(
+                self.exec_channel,
+                latency=self.exec_latency,
+                progress_threads=self.exec_progress_threads,
+            )
+        executor = AsyncExecutor(
+            nworkers=self.nprocs,
+            storage=self.storage,
+            scratch=self.scratch,
+            backend=self._exec_backend_obj,
+            channel=self._exec_channel_obj,
+        )
+        try:
+            res = executor.run(self.deps)
+        finally:
+            executor.close()  # shared channel stays open (closed on exit)
+        self._ensure_exec_stats().merge(res)
+        return res
+
+    def _ensure_exec_stats(self):
+        if self.exec_stats is None:
+            from repro.exec import WaitStats
+
+            mode = "async" if self.exec_channel == "async" else "blocking-channel"
+            self.exec_stats = WaitStats(mode=mode, nworkers=self.nprocs)
+        return self.exec_stats
 
     def _purge_dead(self) -> None:
         if not self._dead_bases:
@@ -567,5 +682,11 @@ class Runtime:
         self._dead_bases = set()
 
     # -- reporting -------------------------------------------------------------
-    def stats(self) -> TimelineResult:
+    def stats(self):
+        """Accumulated run statistics: the simulated
+        :class:`TimelineResult`, or the measured
+        :class:`repro.exec.WaitStats` when ``flush_backend="async"``
+        (both expose makespan / wait_fraction / speedup / summary())."""
+        if self.flush_backend == "async":
+            return self._ensure_exec_stats()
         return self.result

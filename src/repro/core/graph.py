@@ -96,6 +96,16 @@ class DependencySystem:
         self.n_pending = 0
         # instrumentation for the overhead benchmark
         self.scan_steps = 0
+        # when set, newly-ready operations are handed to this callback
+        # instead of the ready deque (used by the async executor so worker
+        # dispatch happens directly on completion callbacks)
+        self.on_ready: Optional[Callable[[OperationNode], None]] = None
+
+    def _make_ready(self, op: OperationNode) -> None:
+        if self.on_ready is not None:
+            self.on_ready(op)
+        else:
+            self.ready.append(op)
 
     # -- recording -------------------------------------------------------
     def insert(self, op: OperationNode) -> None:
@@ -114,7 +124,7 @@ class DependencySystem:
         self.n_ops += 1
         self.n_pending += 1
         if refs == 0:
-            self.ready.append(op)
+            self._make_ready(op)
 
     # -- execution bookkeeping -------------------------------------------
     def complete(self, op: OperationNode) -> list[OperationNode]:
@@ -130,7 +140,7 @@ class DependencySystem:
                 dep.op.refcount -= 1
                 if dep.op.refcount == 0:
                     newly.append(dep.op)
-                    self.ready.append(dep.op)
+                    self._make_ready(dep.op)
             acc.dependents.clear()
         # lazy compaction of dependency lists
         for acc in op.accesses:
@@ -152,6 +162,16 @@ class DependencySystem:
 
     def ready_of_kind(self, kind: str) -> list[OperationNode]:
         return [op for op in self.ready if op.kind == kind]
+
+    def pending_ops(self) -> list[OperationNode]:
+        """All recorded-but-unexecuted operations, in uid order — the
+        diagnostic payload for deadlock reports."""
+        seen: dict[int, OperationNode] = {}
+        for lst in self._lists.values():
+            for acc in lst:
+                if not acc.removed and acc.op is not None and not acc.op.executed:
+                    seen[acc.op.uid] = acc.op
+        return [seen[uid] for uid in sorted(seen)]
 
     @property
     def done(self) -> bool:
@@ -213,6 +233,9 @@ class FullDAG:
 
     def ready_of_kind(self, kind: str) -> list[OperationNode]:
         return [op for op in self.ready if op.kind == kind]
+
+    def pending_ops(self) -> list[OperationNode]:
+        return [op for op in self.nodes if not op.executed]
 
     @property
     def done(self) -> bool:

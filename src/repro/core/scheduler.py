@@ -30,11 +30,24 @@ from typing import Callable, Optional
 from .graph import COMM, COMPUTE, DependencySystem, OperationNode
 from .timeline import ClusterSpec, TimelineResult
 
-__all__ = ["run_schedule", "run_rendezvous_bsp", "DeadlockError"]
+__all__ = ["run_schedule", "run_rendezvous_bsp", "DeadlockError", "format_stuck_ops"]
 
 
 class DeadlockError(RuntimeError):
     pass
+
+
+def format_stuck_ops(ops: list[OperationNode], limit: int = 20) -> str:
+    """Render pending operation-nodes for deadlock diagnostics (shared by
+    the simulated scheduler and the repro.exec async executor)."""
+    lines = [
+        f"  op#{o.uid} [{o.kind}] refcount={o.refcount} procs={o.procs} "
+        f"{o.label or type(o.payload).__name__}"
+        for o in ops[:limit]
+    ]
+    if len(ops) > limit:
+        lines.append(f"  ... and {len(ops) - limit} more")
+    return "\n".join(lines)
 
 
 def run_schedule(
@@ -122,8 +135,10 @@ def run_schedule(
                 schedule(nxt, t)
 
     if not deps.done:
+        stuck = deps.pending_ops() if hasattr(deps, "pending_ops") else []
         raise DeadlockError(
-            f"{deps.n_pending} operations never became ready — dependency cycle"
+            f"{deps.n_pending} operations never became ready — dependency "
+            "cycle.\nstuck operation-nodes:\n" + format_stuck_ops(stuck)
         )
     return res
 

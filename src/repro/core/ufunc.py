@@ -13,7 +13,7 @@ from typing import Callable
 
 import numpy as np
 
-__all__ = ["UFunc", "UFUNCS", "get_ufunc"]
+__all__ = ["UFunc", "UFUNCS", "get_ufunc", "eval_tree"]
 
 
 @dataclass(frozen=True)
@@ -23,9 +23,31 @@ class UFunc:
     nin: int
     cost: float = 1.0  # relative per-element cost vs. a copy
     reduceable: bool = False
+    # fused ufuncs carry their expression tree (see eval_tree) so that
+    # alternative compute backends (repro.exec JaxBackend) can re-trace the
+    # expression with their own primitive implementations instead of
+    # calling the opaque NumPy closure.
+    tree: object = None
 
     def __call__(self, *args):
         return self.fn(*args)
+
+
+def eval_tree(spec, arrays, impl: Callable[["UFunc"], Callable]):
+    """Evaluate a fused-expression spec tree.
+
+    ``spec`` nodes are ``("leaf", i)`` (the i-th input array),
+    ``("const", v)`` (a scalar), or ``(UFunc, (subspec, ...))``.  ``impl``
+    maps each primitive :class:`UFunc` to a callable — ``lambda u: u.fn``
+    reproduces the NumPy semantics; a jnp table retargets the same tree to
+    XLA."""
+    tag = spec[0]
+    if tag == "leaf":
+        return arrays[spec[1]]
+    if tag == "const":
+        return spec[1]
+    f, subs = spec
+    return impl(f)(*[eval_tree(s, arrays, impl) for s in subs])
 
 
 UFUNCS: dict[str, UFunc] = {}

@@ -1,0 +1,49 @@
+"""repro.exec — asynchronous multi-worker execution backend (wall-clock
+latency hiding, not simulated).
+
+The core runtime reproduces the paper's claim on a discrete-event
+simulator; this subsystem executes the *same* recorded dependency graphs
+with genuine concurrency so the waiting-time metric is measured:
+
+* :class:`AsyncExecutor` — per-process worker threads with comm-first
+  ready queues, futures-based completion, structural deadlock detection.
+* :mod:`~repro.exec.channels` — non-blocking transfer channel with a
+  progress engine (scratch buffers delivered while compute runs) vs. the
+  synchronous blocking channel baseline.
+* :class:`NumpyBackend` / :class:`JaxBackend` — pluggable compute
+  backends; the JAX one jit-compiles block payloads and reuses the
+  Pallas stencil kernel from ``repro.kernels``.
+* :class:`WaitStats` — measured per-worker wait-for-communication
+  fractions, printable next to the simulated ``TimelineResult``.
+
+Select it per runtime: ``Runtime(..., flush_backend="async")``.
+"""
+from .backend import (
+    AsyncExecutor,
+    ComputeBackend,
+    JaxBackend,
+    NumpyBackend,
+    make_backend,
+    run_rendezvous_bsp_async,
+)
+from .channels import AsyncChannel, BlockingChannel, RendezvousMailbox, make_channel
+from .futures import Future
+from .stats import WaitStats, WorkerStats
+from .workers import Worker
+
+__all__ = [
+    "AsyncExecutor",
+    "ComputeBackend",
+    "NumpyBackend",
+    "JaxBackend",
+    "make_backend",
+    "run_rendezvous_bsp_async",
+    "AsyncChannel",
+    "BlockingChannel",
+    "RendezvousMailbox",
+    "make_channel",
+    "Future",
+    "WaitStats",
+    "WorkerStats",
+    "Worker",
+]

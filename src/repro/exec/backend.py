@@ -1,0 +1,576 @@
+"""Asynchronous flush executor and pluggable compute backends.
+
+:class:`AsyncExecutor` drains a recorded
+:class:`~repro.core.graph.DependencySystem` with genuine concurrency —
+the wall-clock counterpart of ``repro.core.scheduler.run_schedule``:
+
+* one :class:`~repro.exec.workers.Worker` thread per simulated process,
+  each with a private comm-first ready queue;
+* transfers go through a :mod:`~repro.exec.channels` discipline — the
+  non-blocking :class:`AsyncChannel` progress engine delivers scratch
+  buffers while compute runs, the :class:`BlockingChannel` reproduces the
+  synchronous baseline on the worker's own clock;
+* completion is futures-based: every finished operation resolves a
+  :class:`~repro.exec.futures.Future` whose done-callback performs the
+  refcount decrements (``deps.complete``) and dispatches newly-ready
+  operations — the graph's ``on_ready`` hook delivers them straight to
+  worker queues, no central scheduler loop;
+* the numerical result is bit-identical to the simulated executor's: the
+  dependency system totally orders every pair of conflicting accesses, so
+  any schedule that respects it interprets the payloads (shared
+  ``repro.core.engine.execute_payload``) into the same block contents.
+
+Deadlock is detected structurally, not by timeout: when nothing is in
+flight and the dependency system still has pending operations, no future
+can ever resolve — the executor raises
+:class:`~repro.core.scheduler.DeadlockError` listing the stuck
+operation-nodes.  :func:`run_rendezvous_bsp_async` applies the same
+treatment to the paper's fig. 6 schedule executed with real threads and
+two-sided rendezvous messaging.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from typing import Optional
+
+import numpy as np
+
+from repro.core.engine import MapPayload, MatmulPayload, execute_payload, resolve_ref
+from repro.core.graph import COMM, DependencySystem, OperationNode
+from repro.core.scheduler import DeadlockError, format_stuck_ops
+
+from .channels import RendezvousDeadlock, RendezvousMailbox, make_channel
+from .stats import WaitStats
+from .workers import Worker
+
+__all__ = [
+    "ComputeBackend",
+    "NumpyBackend",
+    "JaxBackend",
+    "make_backend",
+    "AsyncExecutor",
+    "run_rendezvous_bsp_async",
+]
+
+
+# ---------------------------------------------------------------------------
+# Compute backends
+# ---------------------------------------------------------------------------
+
+
+class ComputeBackend:
+    """Executes operation payloads against the runtime's block storage."""
+
+    name = "abstract"
+
+    def __init__(self, storage: dict, scratch: dict):
+        self.storage = storage
+        self.scratch = scratch
+
+    def execute(self, op: OperationNode) -> None:
+        raise NotImplementedError
+
+
+class NumpyBackend(ComputeBackend):
+    """Eager NumPy interpretation — the reference backend (bit-identical
+    to the simulated executor by construction)."""
+
+    name = "numpy"
+
+    def execute(self, op: OperationNode) -> None:
+        execute_payload(op.payload, self.storage, self.scratch)
+
+
+class JaxBackend(ComputeBackend):
+    """jit-compiles block payloads with XLA.
+
+    * Elementwise map payloads (including fused expression trees, via
+      ``UFunc.tree``) are retraced with ``jax.numpy`` primitives and
+      cached per (ufunc, signature).
+    * Fused 5-point stencil payloads are routed through the Pallas
+      ``stencil5_block`` kernel from ``repro.kernels.stencil`` (interpret
+      mode on CPU, compiled on TPU).
+    * Matmul payloads run through a jitted ``jnp.dot``.
+    * Everything else (transfers, reductions, fills) falls back to the
+      NumPy interpreter — those are memory movement, not FLOPs.
+
+    Note: without ``jax_enable_x64`` the payloads compute in float32, so
+    results are *numerically close*, not bit-identical, to the NumPy
+    backend on float64 programs.
+    """
+
+    name = "jax"
+
+    def __init__(self, storage: dict, scratch: dict):
+        super().__init__(storage, scratch)
+        import jax  # the container bakes in the jax toolchain
+        import jax.numpy as jnp
+
+        self._jax = jax
+        self._jnp = jnp
+        self._x64 = bool(jax.config.read("jax_enable_x64"))
+        self._impls = {
+            "identity": lambda x: x,
+            "add": jnp.add,
+            "subtract": jnp.subtract,
+            "multiply": jnp.multiply,
+            "divide": jnp.divide,
+            "power": jnp.power,
+            "negative": jnp.negative,
+            "absolute": jnp.abs,
+            "exp": jnp.exp,
+            "log": jnp.log,
+            "sqrt": jnp.sqrt,
+            "square": jnp.square,
+            "maximum": jnp.maximum,
+            "minimum": jnp.minimum,
+            "greater": lambda a, b: jnp.greater(a, b).astype(jnp.float32),
+            "less": lambda a, b: jnp.less(a, b).astype(jnp.float32),
+            "where": jnp.where,
+        }
+        self._jit_cache: dict = {}
+        self._untranslatable: set = set()  # (name, tree_key) with no jnp form
+        # interpret the Pallas kernel everywhere but on a real TPU
+        self._interpret = jax.default_backend() != "tpu"
+        try:
+            from repro.kernels.stencil import stencil5_block
+
+            self._stencil5 = stencil5_block
+        except Exception:  # pragma: no cover - kernels unavailable
+            self._stencil5 = None
+
+    # -- helpers ---------------------------------------------------------
+    def _to_device(self, x):
+        jnp = self._jnp
+        if isinstance(x, np.ndarray) and not self._x64:
+            if x.dtype == np.float64:
+                return jnp.asarray(x, dtype=jnp.float32)
+            if x.dtype == np.int64:
+                return jnp.asarray(x, dtype=jnp.int32)
+        return jnp.asarray(x)
+
+    def _impl_of(self, u) -> Optional[object]:
+        return self._impls.get(u.name)
+
+    def _trace_ufunc(self, ufunc):
+        """Build a jnp callable for a primitive or fused ufunc; None if a
+        primitive inside has no jnp translation."""
+        from repro.core.ufunc import eval_tree
+
+        if ufunc.tree is not None:
+            missing = []
+
+            def impl(u):
+                f = self._impl_of(u)
+                if f is None:
+                    missing.append(u.name)
+                    return u.fn
+                return f
+
+            # dry-walk the tree for translatability (leaves unevaluated)
+            def walk(spec):
+                if spec[0] in ("leaf", "const"):
+                    return
+                f, subs = spec
+                impl(f)
+                for s in subs:
+                    walk(s)
+
+            walk(ufunc.tree)
+            if missing:
+                return None
+            return lambda *arrays: eval_tree(ufunc.tree, arrays, self._impl_of)
+        f = self._impl_of(ufunc)
+        return None if f is None else (lambda *arrays: f(*arrays))
+
+    @staticmethod
+    def _stencil5_weight(tree) -> Optional[float]:
+        """Match ``w * ((((x0+x1)+x2)+x3)+x4)`` — the fused 5-point
+        stencil sweep — returning the weight, else None."""
+        if not (isinstance(tree, tuple) and len(tree) == 2):
+            return None
+        f, subs = tree
+        if getattr(f, "name", None) != "multiply" or len(subs) != 2:
+            return None
+        const, chain = subs
+        if const[0] != "const":
+            const, chain = chain, const
+        if const[0] != "const":
+            return None
+        expect = 4
+        while isinstance(chain, tuple) and len(chain) == 2 and getattr(
+            chain[0], "name", None
+        ) == "add":
+            _, (left, right) = chain
+            if right != ("leaf", expect):
+                return None
+            expect -= 1
+            chain = left
+        if chain != ("leaf", 0) or expect != 0:
+            return None
+        return float(const[1])
+
+    # -- execution -------------------------------------------------------
+    def execute(self, op: OperationNode) -> None:
+        p = op.payload
+        if isinstance(p, MapPayload):
+            if self._exec_map(p):
+                return
+        elif isinstance(p, MatmulPayload):
+            self._exec_matmul(p)
+            return
+        execute_payload(p, self.storage, self.scratch)
+
+    def _exec_map(self, p: MapPayload) -> bool:
+        ukey = (p.ufunc.name, self._tree_key(p.ufunc.tree))
+        if ukey in self._untranslatable:
+            return False  # known fallback: skip resolving refs twice
+        args = [resolve_ref(r, self.storage, self.scratch) for r in p.args]
+        arr_idx = [i for i, r in enumerate(p.args) if r[0] != "c"]
+        # Pallas fast path: fused 5-point stencil block sweep
+        if (
+            self._stencil5 is not None
+            and p.ufunc.tree is not None
+            and len(arr_idx) == 5
+            and all(getattr(args[i], "ndim", 0) == 2 for i in arr_idx)
+            and len({args[i].shape for i in arr_idx}) == 1
+        ):
+            w = self._stencil5_weight(p.ufunc.tree)
+            if w is not None:
+                xs = [self._to_device(np.ascontiguousarray(args[i])) for i in arr_idx]
+                res = self._stencil5(*xs, weight=w, interpret=self._interpret)
+                self._store(p, np.asarray(res))
+                return True
+        fn = self._cached_jit(p, args, arr_idx)
+        if fn is None:
+            self._untranslatable.add(ukey)
+            return False
+        dev_args = list(args)
+        for i in arr_idx:
+            dev_args[i] = self._to_device(np.ascontiguousarray(args[i]))
+        self._store(p, np.asarray(fn(*dev_args)))
+        return True
+
+    @staticmethod
+    def _tree_key(spec):
+        """Structural signature of an expression tree: two independently
+        built but identical fused expressions must share one jit entry
+        (keying on object identity would recompile per materialize and
+        pin dead closures in the cache forever)."""
+        if spec is None:
+            return None
+        tag = spec[0]
+        if tag in ("leaf", "const"):
+            return spec
+        f, subs = spec
+        return (f.name, tuple(JaxBackend._tree_key(s) for s in subs))
+
+    def _cached_jit(self, p: MapPayload, args, arr_idx):
+        sig = tuple(
+            (args[i].shape, str(args[i].dtype)) if i in arr_idx else ("c",)
+            for i in range(len(args))
+        )
+        key = (p.ufunc.name, self._tree_key(p.ufunc.tree), sig)
+        fn = self._jit_cache.get(key)
+        if fn is None and key not in self._jit_cache:
+            traced = self._trace_ufunc(p.ufunc)
+            fn = None if traced is None else self._jax.jit(traced)
+            self._jit_cache[key] = fn
+        return fn
+
+    def _exec_matmul(self, p: MatmulPayload) -> None:
+        jnp = self._jnp
+        a = resolve_ref(p.a, self.storage, self.scratch)
+        b = resolve_ref(p.b, self.storage, self.scratch)
+        if p.trans_a:
+            a = a.T
+        if p.trans_b:
+            b = b.T
+        key = ("mm", a.shape, b.shape, str(a.dtype), str(b.dtype))
+        fn = self._jit_cache.get(key)
+        if fn is None:
+            fn = self._jax.jit(lambda x, y: jnp.dot(x, y))
+            self._jit_cache[key] = fn
+        val = np.asarray(fn(self._to_device(np.ascontiguousarray(a)),
+                            self._to_device(np.ascontiguousarray(b))))
+        blk = self.storage[(p.out_base, p.out_frag.block)]
+        if p.init:
+            blk[p.out_frag.slices] = val
+        else:
+            blk[p.out_frag.slices] += val
+
+    def _store(self, p: MapPayload, res: np.ndarray) -> None:
+        blk = self.storage[(p.out_base, p.out_frag.block)]
+        blk[p.out_frag.slices] = res
+
+
+_BACKENDS = {"numpy": NumpyBackend, "jax": JaxBackend}
+
+
+def make_backend(name, storage: dict, scratch: dict) -> ComputeBackend:
+    if isinstance(name, ComputeBackend):
+        return name
+    try:
+        cls = _BACKENDS[name]
+    except KeyError:
+        raise ValueError(
+            f"unknown exec backend {name!r} (expected one of {sorted(_BACKENDS)})"
+        ) from None
+    return cls(storage, scratch)
+
+
+# ---------------------------------------------------------------------------
+# The asynchronous executor
+# ---------------------------------------------------------------------------
+
+
+class AsyncExecutor:
+    """Drains a DependencySystem on worker threads + transfer channels."""
+
+    def __init__(
+        self,
+        nworkers: int,
+        storage: dict,
+        scratch: dict,
+        backend: str = "numpy",
+        channel: str = "async",
+        latency: float = 0.0,
+        progress_threads: int = 2,
+    ):
+        self.nworkers = nworkers
+        self.backend = make_backend(backend, storage, scratch)
+        # a channel instance may be shared across flushes (the owner closes
+        # it); a name means this executor owns the channel's lifecycle
+        self._owns_channel = isinstance(channel, str)
+        self.channel = make_channel(
+            channel, latency=latency, progress_threads=progress_threads
+        )
+        self.mode = "blocking-channel" if self.channel.blocking else "async"
+        self.workers = [
+            Worker(r, self._run_op, self._record_error) for r in range(nworkers)
+        ]
+        self._glock = threading.Lock()  # guards deps + inflight accounting
+        self._deps: Optional[DependencySystem] = None
+        self._inflight = 0
+        self._ready_batch: list[OperationNode] = []
+        self._finished = threading.Event()
+        self._error: Optional[BaseException] = None
+        self._started = False
+        self.comm_bytes = 0
+        self.n_comm_ops = 0
+        self.n_compute_ops = 0
+
+    # -- error path ------------------------------------------------------
+    def _record_error(self, exc: BaseException) -> None:
+        if self._error is None:
+            self._error = exc
+        self._finished.set()
+
+    # -- transfer execution (runs on progress threads / workers) ----------
+    def _exec_comm(self, op: OperationNode) -> None:
+        execute_payload(op.payload, self.backend.storage, self.backend.scratch)
+
+    # -- dispatch ---------------------------------------------------------
+    def _count_op(self, op: OperationNode) -> None:
+        """Op accounting — call with _glock held (many threads dispatch)."""
+        if op.kind == COMM:
+            self.n_comm_ops += 1
+            self.comm_bytes += op.nbytes
+        else:
+            self.n_compute_ops += 1
+
+    def _dispatch(self, op: OperationNode) -> None:
+        """Route a ready op.  COMM on the async channel is initiated
+        immediately from the discovering thread (aggressive initiation —
+        invariant 2 holds even while the owner worker is mid-compute);
+        everything else goes to its owner's comm-first ready queue."""
+        if op.kind == COMM and not self.channel.blocking:
+            fut = self.channel.post(op, self._exec_comm)
+            fut.add_done_callback(lambda f, op=op: self._op_done(op, f.exception()))
+            return
+        # compute — and, under the blocking discipline, transfers too: the
+        # source process performs them synchronously on its own thread
+        self.workers[op.procs[0] % self.nworkers].push(op)
+
+    def _run_op(self, op: OperationNode, worker: Worker) -> None:
+        if op.kind == COMM:  # blocking channel only: inline transfer
+            t0 = time.perf_counter()  # wall: the blocking IS the waiting
+            fut = self.channel.post(op, self._exec_comm)
+            worker.stats.comm_busy += time.perf_counter() - t0
+            worker.stats.n_comm += 1
+            fut.add_done_callback(lambda f, op=op: self._op_done(op, f.exception()))
+            return
+        # compute is accounted in per-thread CPU time: wall durations on an
+        # oversubscribed machine include GIL/scheduler preemption, which
+        # would inflate "busy" exactly when contention is worst
+        t0 = time.thread_time()
+        try:
+            self.backend.execute(op)
+        except BaseException as exc:
+            self._op_done(op, exc)
+            return
+        worker.stats.compute_busy += time.thread_time() - t0
+        worker.stats.n_compute += 1
+        self._op_done(op, None)
+
+    # -- completion (futures callbacks land here) --------------------------
+    def _op_done(self, op: OperationNode, exc: Optional[BaseException]) -> None:
+        # this runs as a future done-callback on worker/progress threads: it
+        # must never raise, or the completing thread dies and the drain hangs
+        try:
+            self._op_done_inner(op, exc)
+        except BaseException as internal:  # pragma: no cover - defensive
+            self._record_error(internal)
+
+    def _op_done_inner(self, op: OperationNode, exc: Optional[BaseException]) -> None:
+        if exc is not None:
+            self._record_error(exc)
+            return
+        deadlocked = False
+        with self._glock:
+            if self._deps is None:  # already torn down
+                return
+            self._inflight -= 1
+            self._deps.complete(op)  # on_ready collects into _ready_batch
+            newly, self._ready_batch = self._ready_batch, []
+            self._inflight += len(newly)
+            for nxt in newly:
+                self._count_op(nxt)
+            if self._inflight == 0:
+                if self._deps.done:
+                    self._finished.set()
+                else:
+                    deadlocked = True
+        for nxt in newly:
+            self._dispatch(nxt)
+        if deadlocked:
+            self._record_error(self._deadlock_error())
+            self._finished.set()
+
+    def _deadlock_error(self) -> DeadlockError:
+        stuck = self._deps.pending_ops() if self._deps is not None else []
+        return DeadlockError(
+            f"async flush stalled: {len(stuck)} operations pending, none in "
+            f"flight — dependency cycle or lost completion.\nstuck operation-nodes:\n"
+            + format_stuck_ops(stuck)
+        )
+
+    # -- main entry -------------------------------------------------------
+    def run(self, deps: DependencySystem) -> WaitStats:
+        """Drain ``deps``; returns the measured WaitStats for this flush."""
+        if self._started:
+            raise RuntimeError("AsyncExecutor.run is one-shot; build a new one")
+        self._started = True
+        self._deps = deps
+        prev_hook = deps.on_ready
+        # late-bound: _op_done swaps _ready_batch for a fresh list per batch
+        deps.on_ready = lambda op: self._ready_batch.append(op)
+        for w in self.workers:
+            w.start()
+        t0 = time.perf_counter()
+        try:
+            # initial drain: everything recorded ready before we attached
+            initial = []
+            with self._glock:
+                while True:
+                    op = deps.pop_ready()
+                    if op is None:
+                        break
+                    initial.append(op)
+                    self._count_op(op)
+                self._inflight += len(initial)
+                if not initial and not deps.done:
+                    raise self._deadlock_error()
+            for op in initial:
+                self._dispatch(op)
+            if deps.n_pending > 0 or self._inflight > 0:
+                self._finished.wait()
+            if self._error is not None:
+                raise self._error
+        finally:
+            elapsed = time.perf_counter() - t0
+            with self._glock:
+                self._deps = None
+            deps.on_ready = prev_hook
+            for w in self.workers:
+                w.stop()
+            for w in self.workers:
+                w.join(timeout=5.0)
+        stats = WaitStats(
+            mode=self.mode,
+            nworkers=self.nworkers,
+            elapsed=elapsed,
+            procs=[w.stats for w in self.workers],
+            comm_bytes=self.comm_bytes,
+            n_comm_ops=self.n_comm_ops,
+            n_compute_ops=self.n_compute_ops,
+            seq_time=sum(w.stats.compute_busy for w in self.workers),
+            n_flushes=1,
+        )
+        return stats
+
+    def close(self) -> None:
+        if self._owns_channel:
+            self.channel.close()
+
+
+# ---------------------------------------------------------------------------
+# Fig. 6 on real threads: naive BSP + two-sided rendezvous messaging
+# ---------------------------------------------------------------------------
+
+
+def run_rendezvous_bsp_async(per_proc_programs: list[list[dict]]) -> int:
+    """Execute the paper's naive evaluation (fig. 6) with real threads:
+    each rank walks its own operation list in order; sends and receives
+    rendezvous through a :class:`RendezvousMailbox`.
+
+    Well-ordered schedules complete and return the number of completed
+    steps.  Schedules like fig. 6's deadlock — detected structurally (all
+    live ranks parked on unmatched messages) and refused with a
+    :class:`DeadlockError` listing the stuck operation-nodes.  This is the
+    contrast the flush executor exists for: the *same* data movement
+    expressed as one-sided transfers in a dependency graph cannot
+    deadlock (§5.7.1).
+    """
+    n = len(per_proc_programs)
+    mailbox = RendezvousMailbox(n)
+    steps = [0] * n
+    failures: list[RendezvousDeadlock] = []
+    lock = threading.Lock()
+
+    def rank_main(rank: int) -> None:
+        try:
+            for pc, op in enumerate(per_proc_programs[rank]):
+                if op["kind"] == "compute":
+                    steps[rank] += 1
+                    continue
+                mailbox.transact(rank, op["kind"], op["peer"], op["tag"], pc)
+                steps[rank] += 1
+        except RendezvousDeadlock as exc:
+            with lock:
+                failures.append(exc)
+        finally:
+            mailbox.finish(rank)
+
+    threads = [
+        threading.Thread(target=rank_main, args=(r,), name=f"bsp-rank-{r}")
+        for r in range(n)
+    ]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join()
+    if failures:
+        stuck = failures[0].stuck
+        lines = [
+            f"  p{s['rank']}@step{s['step']}: {s['kind']} tag={s['tag']!r} "
+            f"peer=p{s['peer']}"
+            for s in stuck
+        ]
+        raise DeadlockError(
+            "rendezvous-BSP schedule deadlocked (paper fig. 6): every live "
+            "rank is parked on an unmatched two-sided message.\n"
+            "stuck operation-nodes:\n" + "\n".join(lines)
+        )
+    return sum(steps)

@@ -1,0 +1,126 @@
+"""Measured wait-for-communication statistics (wall-clock counterpart of
+:class:`repro.core.timeline.TimelineResult`).
+
+The discrete-event simulator *models* the paper's headline metric — the
+fraction of CPU time each process spends waiting for communication.  The
+asynchronous executor *measures* it: every worker thread accounts the
+wall-clock time it spends executing compute payloads (busy), blocked
+inside channel operations (comm wait), and idle with an empty ready
+queue (dependency wait).  :class:`WaitStats` exposes the same properties
+and ``summary()`` layout as ``TimelineResult`` so the two can be printed
+side by side in the paper tables.
+"""
+from __future__ import annotations
+
+from dataclasses import dataclass, field
+
+__all__ = ["WorkerStats", "WaitStats"]
+
+
+@dataclass
+class WorkerStats:
+    """Per-worker accounting (mirrors ``ProcStats``).  ``compute_busy``
+    is per-thread CPU time (GIL/scheduler preemption excluded);
+    ``comm_busy`` and ``idle`` are wall-clock — being blocked is the
+    thing measured."""
+
+    compute_busy: float = 0.0  # executing compute payloads (CPU time)
+    comm_busy: float = 0.0  # blocked inside channel ops (blocking mode)
+    idle: float = 0.0  # ready queue empty, waiting on dependencies
+    n_compute: int = 0
+    n_comm: int = 0
+
+    def absorb(self, other: "WorkerStats") -> None:
+        self.compute_busy += other.compute_busy
+        self.comm_busy += other.comm_busy
+        self.idle += other.idle
+        self.n_compute += other.n_compute
+        self.n_comm += other.n_comm
+
+
+@dataclass
+class WaitStats:
+    """Aggregated measured timeline of one (or several merged) flushes."""
+
+    mode: str  # "async" | "blocking-channel"
+    nworkers: int
+    elapsed: float = 0.0  # wall-clock duration of the drain(s)
+    procs: list[WorkerStats] = field(default_factory=list)
+    comm_bytes: int = 0
+    n_comm_ops: int = 0
+    n_compute_ops: int = 0
+    seq_time: float = 0.0  # Σ measured compute durations = 1-worker time
+    n_flushes: int = 0
+
+    def __post_init__(self):
+        if not self.procs:
+            self.procs = [WorkerStats() for _ in range(self.nworkers)]
+
+    # -- paper metrics (same contract as TimelineResult) ------------------
+    @property
+    def makespan(self) -> float:
+        return self.elapsed
+
+    @property
+    def total_compute(self) -> float:
+        return sum(p.compute_busy for p in self.procs)
+
+    @property
+    def wait_fraction(self) -> float:
+        """Measured fraction of worker time not spent computing.  Time
+        blocked in synchronous channel calls counts as waiting, exactly as
+        blocking communication does in the simulated metric."""
+        if self.elapsed <= 0:
+            return 0.0
+        total = self.nworkers * self.elapsed
+        return max(0.0, 1.0 - self.total_compute / total)
+
+    @property
+    def cpu_utilization(self) -> float:
+        return 1.0 - self.wait_fraction
+
+    @property
+    def speedup(self) -> float:
+        """Measured speedup vs. draining every compute payload on one
+        worker (Σ compute durations / wall-clock)."""
+        return self.seq_time / self.elapsed if self.elapsed > 0 else 0.0
+
+    @property
+    def comm_wait_fraction(self) -> float:
+        """Share of worker time blocked specifically inside channel ops."""
+        if self.elapsed <= 0:
+            return 0.0
+        return sum(p.comm_busy for p in self.procs) / (self.nworkers * self.elapsed)
+
+    def merge(self, other: "WaitStats") -> "WaitStats":
+        """Accumulate a later flush (flushes are serialized, so wall-clock
+        durations add)."""
+        assert other.nworkers == self.nworkers
+        self.elapsed += other.elapsed
+        self.comm_bytes += other.comm_bytes
+        self.n_comm_ops += other.n_comm_ops
+        self.n_compute_ops += other.n_compute_ops
+        self.seq_time += other.seq_time
+        self.n_flushes += max(1, other.n_flushes)
+        for mine, theirs in zip(self.procs, other.procs):
+            mine.absorb(theirs)
+        return self
+
+    def summary(self) -> str:
+        return (
+            f"[{self.mode:>14s}] makespan={self.elapsed * 1e3:9.3f} ms "
+            f"wait={self.wait_fraction * 100:5.1f}% "
+            f"speedup={self.speedup:6.2f} "
+            f"comm={self.comm_bytes / 1e6:8.2f} MB "
+            f"ops={self.n_compute_ops}c/{self.n_comm_ops}m"
+        )
+
+    def per_worker_table(self) -> str:
+        lines = [f"{'worker':>6s} {'compute ms':>11s} {'comm-wait ms':>13s} "
+                 f"{'idle ms':>9s} {'ops':>9s}"]
+        for i, p in enumerate(self.procs):
+            lines.append(
+                f"{i:6d} {p.compute_busy * 1e3:11.3f} {p.comm_busy * 1e3:13.3f} "
+                f"{p.idle * 1e3:9.3f} {p.n_compute:4d}c/{p.n_comm:3d}m"
+            )
+        return "\n".join(lines)

@@ -1,0 +1,91 @@
+"""Per-process worker threads with comm-first ready queues (paper §5.7,
+executed on the wall clock instead of the event simulator).
+
+Each simulated process rank gets one :class:`Worker` thread and one
+private ready deque.  The scheduler invariants are preserved exactly:
+
+* invariant 1 — an operation is enqueued only when its refcount hits
+  zero (the dependency system guarantees this);
+* invariant 2 — a worker always initiates every ready *communication*
+  operation before touching ready computation (comm-first pop order; on
+  the async channel, initiation is non-blocking so all ready transfers
+  are in flight before the first compute payload runs);
+* invariant 3 — a worker only blocks (goes idle) when it has neither
+  ready communication nor ready computation.
+
+Workers report wall-clock accounting into a :class:`WorkerStats` each:
+compute-busy, comm-blocked (synchronous channels), and idle time.
+"""
+from __future__ import annotations
+
+import threading
+import time
+from collections import deque
+from typing import Callable, Optional
+
+from repro.core.graph import COMM, OperationNode
+
+from .stats import WorkerStats
+
+__all__ = ["Worker"]
+
+
+class Worker(threading.Thread):
+    """One simulated process: drains its own ready queue comm-first."""
+
+    def __init__(
+        self,
+        rank: int,
+        execute_op: Callable[[OperationNode, "Worker"], None],
+        on_error: Callable[[BaseException], None],
+    ):
+        super().__init__(name=f"exec-worker-{rank}", daemon=True)
+        self.rank = rank
+        self._execute_op = execute_op
+        self._on_error = on_error
+        self._cv = threading.Condition()
+        self._queue: deque[OperationNode] = deque()
+        self._stopped = False
+        self.stats = WorkerStats()
+
+    # -- producer side (executor dispatch) --------------------------------
+    def push(self, op: OperationNode) -> None:
+        with self._cv:
+            self._queue.append(op)
+            self._cv.notify()
+
+    def stop(self) -> None:
+        with self._cv:
+            self._stopped = True
+            self._cv.notify()
+
+    # -- consumer side ----------------------------------------------------
+    def _pop(self) -> Optional[OperationNode]:
+        """Comm-first pop: any ready transfer outranks every ready compute
+        (invariant 2).  Blocks while the queue is empty, accounting idle
+        time; returns None on shutdown."""
+        with self._cv:
+            idle_from = None
+            while not self._queue:
+                if self._stopped:
+                    return None
+                if idle_from is None:
+                    idle_from = time.perf_counter()
+                self._cv.wait()
+            if idle_from is not None:
+                self.stats.idle += time.perf_counter() - idle_from
+            for i, op in enumerate(self._queue):
+                if op.kind == COMM:
+                    del self._queue[i]
+                    return op
+            return self._queue.popleft()
+
+    def run(self) -> None:
+        try:
+            while True:
+                op = self._pop()
+                if op is None:
+                    return
+                self._execute_op(op, self)
+        except BaseException as exc:  # pragma: no cover - surfaced by executor
+            self._on_error(exc)

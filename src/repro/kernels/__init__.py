@@ -12,3 +12,13 @@ Each kernel ships three files per the repo convention:
 * ``mamba2_scan``     — chunked SSD scan (zamba2's mixer).
 * ``rwkv6_wkv``       — chunked data-dependent-decay wkv recurrence.
 """
+
+
+def tpu_compiler_params(**kwargs):
+    """Build TPU compiler params across the pallas API rename:
+    ``pltpu.TPUCompilerParams`` (jax ≤ 0.4.x) became
+    ``pltpu.CompilerParams`` (jax ≥ 0.5)."""
+    from jax.experimental.pallas import tpu as pltpu
+
+    cls = getattr(pltpu, "CompilerParams", None) or pltpu.TPUCompilerParams
+    return cls(**kwargs)

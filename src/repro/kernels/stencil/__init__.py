@@ -1,4 +1,4 @@
-from .ops import jacobi_sweep
+from .ops import jacobi_sweep, stencil5_block
 from .ref import jacobi_sweep_ref
 
-__all__ = ["jacobi_sweep", "jacobi_sweep_ref"]
+__all__ = ["jacobi_sweep", "stencil5_block", "jacobi_sweep_ref"]

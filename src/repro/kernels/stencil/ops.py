@@ -1,4 +1,4 @@
-"""jit'd public wrapper for the fused Jacobi-sweep kernel."""
+"""jit'd public wrappers for the fused Jacobi-sweep kernels."""
 from __future__ import annotations
 
 import functools
@@ -6,7 +6,7 @@ import functools
 import jax
 import jax.numpy as jnp
 
-from .kernel import jacobi_sweep_kernel
+from .kernel import jacobi_sweep_kernel, stencil5_block_kernel
 
 
 @functools.partial(jax.jit, static_argnames=("band", "interpret"))
@@ -28,3 +28,12 @@ def jacobi_sweep(x: jax.Array, *, band: int = 128, interpret: bool = True):
         # re-pin the true last row (it was treated as interior above)
         out = out.at[H - 1].set(x[H - 1])
     return out
+
+
+@functools.partial(jax.jit, static_argnames=("weight", "interpret"))
+def stencil5_block(x0, x1, x2, x3, x4, *, weight: float, interpret: bool = True):
+    """Fused per-block 5-point combine ``weight * (x0+..+x4)`` (the
+    repro.exec JaxBackend's fast path for fused stencil map payloads)."""
+    return stencil5_block_kernel(
+        x0, x1, x2, x3, x4, weight=weight, interpret=interpret
+    )

@@ -1,6 +1,7 @@
 """Unit + property tests for the block decomposition (paper §5.2)."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core.blocks import (

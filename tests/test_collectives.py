@@ -14,7 +14,10 @@ _SCRIPT = textwrap.dedent(
     os.environ["XLA_FLAGS"] = "--xla_force_host_platform_device_count=8"
     import jax, jax.numpy as jnp, numpy as np
     from jax.sharding import Mesh, PartitionSpec as P
-    from jax import shard_map
+    try:
+        from jax import shard_map
+    except ImportError:  # jax <= 0.4.x
+        from jax.experimental.shard_map import shard_map
     from repro.comm.collectives import (
         ring_all_gather, ring_reduce_scatter, ag_matmul, matmul_rs,
         halo_exchange, stencil_1d_sharded, jacobi_step_sharded,
@@ -22,7 +25,10 @@ _SCRIPT = textwrap.dedent(
 
     mesh = jax.make_mesh((8,), ("x",))
     def smap(f, in_specs, out_specs):
-        return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+        try:
+            return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_vma=False)
+        except TypeError:  # jax <= 0.4.x spells it check_rep
+            return shard_map(f, mesh=mesh, in_specs=in_specs, out_specs=out_specs, check_rep=False)
 
     k = jax.random.PRNGKey(0)
     # ring all-gather == lax.all_gather
@@ -100,7 +106,9 @@ _SCRIPT = textwrap.dedent(
 def test_collectives_under_shard_map():
     env = dict(os.environ)
     env["PYTHONPATH"] = "src"
-    env.pop("JAX_PLATFORMS", None)
+    # force the host CPU backend: the fake-device XLA flag only applies to
+    # it, and probing for a TPU wastes minutes when libtpu is present
+    env["JAX_PLATFORMS"] = "cpu"
     res = subprocess.run(
         [sys.executable, "-c", _SCRIPT],
         capture_output=True, text=True, env=env, cwd=os.path.dirname(os.path.dirname(__file__)),

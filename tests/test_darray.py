@@ -7,6 +7,7 @@ fusion on or off.
 """
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 from repro.core import Runtime

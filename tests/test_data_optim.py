@@ -1,6 +1,7 @@
 """Data pipeline determinism/sharding + optimizer unit tests."""
 import numpy as np
 import pytest
+pytest.importorskip("hypothesis")  # property tests need the dev extra
 from hypothesis import given, settings, strategies as st
 
 import jax

@@ -12,8 +12,15 @@ from repro.launch.sharding import batch_specs, param_specs, state_specs
 from repro.launch.steps import cell_config, skip_reason
 from repro.models import init_params, make_decode_state
 
-MESH = AbstractMesh((16, 16), ("data", "model"))
-MESH3 = AbstractMesh((2, 16, 16), ("pod", "data", "model"))
+def _abstract_mesh(sizes, names):
+    try:  # jax >= 0.5: AbstractMesh(axis_sizes, axis_names)
+        return AbstractMesh(sizes, names)
+    except TypeError:  # jax <= 0.4.x: AbstractMesh(((name, size), ...))
+        return AbstractMesh(tuple(zip(names, sizes)))
+
+
+MESH = _abstract_mesh((16, 16), ("data", "model"))
+MESH3 = _abstract_mesh((2, 16, 16), ("pod", "data", "model"))
 
 
 def _leaf_specs(cfg, mesh=MESH):
@@ -103,7 +110,8 @@ def test_batch_specs_dp_and_sp():
     cfg = get_config("granite-3-8b")
     b = make_batch_specs(cfg, SHAPES["train_4k"])
     spec = batch_specs(b, MESH)
-    assert spec["tokens"] == P(("data",), None)
+    # older jax does not normalize P(("data",), ...) == P("data", ...)
+    assert spec["tokens"] in (P(("data",), None), P("data", None))
     # long-context (batch=1): sequence sharded instead
     b1 = {"tokens": jax.ShapeDtypeStruct((1, 524288), jnp.int32)}
     spec1 = batch_specs(b1, MESH, seq_sharded=True)
