@@ -13,6 +13,7 @@ from __future__ import annotations
 
 import numpy as np
 
+from repro.api import ExecutionPolicy, RuntimeConfig
 from repro.core import Runtime
 from repro.core import darray as dnp
 from repro.core.timeline import GIGE_2012
@@ -255,38 +256,75 @@ APPS = {
 # ---------------------------------------------------------------------------
 
 
+_UNSET = object()
+
+
 def run_app(
     name: str,
     *,
-    mode: str = "latency_hiding",
-    nprocs: int = 16,
-    block_size=None,
-    execute: bool = True,
-    fusion: bool = False,
-    cluster=GIGE_2012,
-    flush_backend: str = "sim",
-    exec_backend: str = "numpy",
-    exec_channel=None,
-    exec_latency: float = 0.0,
+    mode=_UNSET,
+    nprocs=_UNSET,
+    block_size=_UNSET,
+    execute=_UNSET,
+    fusion=_UNSET,
+    cluster=_UNSET,
+    flush_backend=_UNSET,
+    exec_backend=_UNSET,
+    exec_channel=_UNSET,
+    exec_latency=_UNSET,
+    config: RuntimeConfig = None,
+    policy: ExecutionPolicy = None,
     **kw,
 ):
+    """Run one paper app and return ``(stats, result)``.
+
+    Preferred invocation passes a :class:`RuntimeConfig` /
+    :class:`ExecutionPolicy` pair; the individual keyword arguments
+    remain as shorthand and are folded into the config objects when no
+    explicit object is given.  Mixing an explicit object with its
+    shorthand kwargs is refused (the kwarg would be silently ignored).
+    """
     fn, defaults, default_bs = APPS[name]
-    block_size = default_bs if block_size is None else block_size
     kwargs = {**defaults, **kw}
-    with Runtime(
-        nprocs=nprocs,
-        block_size=block_size,
-        mode=mode,
-        cluster=cluster,
-        execute=execute,
-        fusion=fusion,
-        flush_backend=flush_backend,
-        exec_backend=exec_backend,
-        exec_channel=exec_channel,
-        exec_latency=exec_latency,
-    ) as rt:
+    cfg_kw = dict(nprocs=nprocs, block_size=block_size, execute=execute,
+                  fusion=fusion)
+    pol_kw = dict(mode=mode, cluster=cluster, flush_backend=flush_backend,
+                  exec_backend=exec_backend, exec_channel=exec_channel,
+                  exec_latency=exec_latency)
+    if config is None:
+        bs = cfg_kw["block_size"]
+        config = RuntimeConfig(
+            nprocs=16 if cfg_kw["nprocs"] is _UNSET else cfg_kw["nprocs"],
+            block_size=default_bs if bs in (_UNSET, None) else bs,
+            fusion=False if cfg_kw["fusion"] is _UNSET else cfg_kw["fusion"],
+            execute=True if cfg_kw["execute"] is _UNSET else cfg_kw["execute"],
+        )
+    else:
+        clash = [k for k, v in cfg_kw.items() if v is not _UNSET]
+        if clash:
+            raise TypeError(
+                f"run_app: got both config= and shorthand kwarg(s) {clash} — "
+                f"put them on the RuntimeConfig"
+            )
+    if policy is None:
+        policy = ExecutionPolicy(
+            scheduler="latency_hiding" if mode is _UNSET else mode,
+            flush="sim" if flush_backend is _UNSET else flush_backend,
+            backend="numpy" if exec_backend is _UNSET else exec_backend,
+            channel=None if exec_channel is _UNSET else exec_channel,
+            latency=0.0 if exec_latency is _UNSET else exec_latency,
+            cluster=GIGE_2012 if cluster is _UNSET else cluster,
+        )
+    else:
+        clash = [k for k, v in pol_kw.items() if v is not _UNSET]
+        if clash:
+            raise TypeError(
+                f"run_app: got both policy= and shorthand kwarg(s) {clash} — "
+                f"use policy.replace(...) instead"
+            )
+    with Runtime.from_config(config, policy) as rt:
         out = fn(**kwargs)
-        result = np.asarray(out) if execute else None
+        result = np.asarray(out) if config.execute else None
         stats = rt.stats()
     return stats, result
 

@@ -131,22 +131,29 @@ def run_roofline(results_dir="results/dryrun"):
             print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:10s} {r['status']:>10s}  {reason}")
 
 
-def run_real_overlap(fast: bool):
+def run_real_overlap(fast: bool, backend: str = "numpy"):
     """§5 measured on the wall clock: drain the stencil schedule through
     repro.exec with the non-blocking progress-engine channel (overlap on)
     vs the synchronous channel (overlap off), injecting a scaled-up α
     (10 ms — see the regime note below) per message so there is real
-    latency to hide.  The side-by-side simulated columns run the cluster
-    model at the same α, so the two halves of the table are comparable."""
+    latency to hide.  The simulated rows run the cluster model at the
+    same α; ``format_stats`` renders all four with identical columns.
+
+    The execution stack is swept declaratively: one measured
+    ``ExecutionPolicy`` and its ``.replace(channel=...)`` sibling, with
+    the compute ``backend`` (numpy | jax | auto) resolved through the
+    plugin registry."""
     import dataclasses
 
     import numpy as np
 
     from benchmarks.paper_apps import run_app
+    from repro.api import ExecutionPolicy, format_stats
     from repro.core.timeline import GIGE_2012
 
-    section("5. Real overlap — stencil app, measured wall-clock wait% "
-            "(repro.exec async executor, 10 ms α injected per message)")
+    section(f"5. Real overlap — stencil app, measured wall-clock wait% "
+            f"(repro.exec async executor, 10 ms α injected, "
+            f"backend={backend!r})")
     # regime choice: per-message latency must dominate the ~0.1 ms/op
     # Python dispatch overhead for the overlap signal to be stable on a
     # shared machine, so α is scaled up to 10 ms (a WAN-class link) and
@@ -158,27 +165,28 @@ def run_real_overlap(fast: bool):
         n=512, iters=6, block_size=128)
     cl = dataclasses.replace(GIGE_2012, alpha=latency, name="gige-alpha-10ms")
 
-    st_sim_lh, _ = run_app("jacobi_stencil", mode="latency_hiding",
-                           nprocs=nprocs, cluster=cl, **kw)
-    st_sim_bl, _ = run_app("jacobi_stencil", mode="blocking",
-                           nprocs=nprocs, cluster=cl, **kw)
+    simulated = ExecutionPolicy(scheduler="latency_hiding", cluster=cl)
+    measured = ExecutionPolicy(
+        flush="async", backend=backend, channel="async", latency=latency
+    )
+
+    st_sim_lh, _ = run_app("jacobi_stencil", nprocs=nprocs,
+                           policy=simulated, **kw)
+    st_sim_bl, _ = run_app("jacobi_stencil", nprocs=nprocs,
+                           policy=simulated.replace(scheduler="blocking"), **kw)
     st_on, r_on = run_app("jacobi_stencil", nprocs=nprocs,
-                          flush_backend="async", exec_channel="async",
-                          exec_latency=latency, **kw)
+                          policy=measured, **kw)
     st_off, r_off = run_app("jacobi_stencil", nprocs=nprocs,
-                            flush_backend="async", exec_channel="blocking",
-                            exec_latency=latency, **kw)
+                            policy=measured.replace(channel="blocking"), **kw)
     assert np.array_equal(np.asarray(r_on), np.asarray(r_off)), \
         "channel discipline changed the numerical result!"
 
-    print(f"{'channel':22s} {'measured wait%':>14s} {'makespan ms':>12s} "
-          f"{'comm ops':>9s}   {'simulated wait%':>15s}")
-    print(f"{'overlap ON  (async)':22s} {st_on.wait_fraction*100:13.1f}% "
-          f"{st_on.makespan*1e3:12.1f} {st_on.n_comm_ops:9d}   "
-          f"{st_sim_lh.wait_fraction*100:14.1f}%")
-    print(f"{'overlap OFF (blocking)':22s} {st_off.wait_fraction*100:13.1f}% "
-          f"{st_off.makespan*1e3:12.1f} {st_off.n_comm_ops:9d}   "
-          f"{st_sim_bl.wait_fraction*100:14.1f}%")
+    print(format_stats([
+        ("overlap ON  (async)", st_on),
+        ("overlap OFF (blocking)", st_off),
+        ("latency-hiding (model)", st_sim_lh),
+        ("blocking (model)", st_sim_bl),
+    ]))
     print(f"\n  wall-clock win from overlap: {st_off.makespan/st_on.makespan:.2f}x "
           f"(paper fig. 18, simulated: "
           f"{st_sim_bl.makespan/st_sim_lh.makespan:.2f}x)")
@@ -193,6 +201,10 @@ def main() -> None:
     ap.add_argument("--skip-kernels", action="store_true")
     ap.add_argument("--skip-roofline", action="store_true")
     ap.add_argument("--skip-real-overlap", action="store_true")
+    ap.add_argument("--exec-backend", default="numpy",
+                    help="compute backend for the real-overlap section, "
+                         "resolved through the plugin registry "
+                         "(numpy | jax | auto | any registered name)")
     args = ap.parse_args()
     if not args.skip_apps:
         run_paper_apps(args.fast)
@@ -203,7 +215,7 @@ def main() -> None:
     if not args.skip_roofline:
         run_roofline()
     if not args.skip_real_overlap:
-        run_real_overlap(args.fast)
+        run_real_overlap(args.fast, backend=args.exec_backend)
 
 
 if __name__ == "__main__":

@@ -1,33 +1,33 @@
 """Quickstart: the paper's programming model in 30 lines.
 
 A sequential-looking NumPy program runs distributed with automatic
-latency-hiding — the only API difference from NumPy is creation-time
-(`Runtime` context here; `dist=True` in DistNumPy).
+latency-hiding — the program below uses only the NumPy namespace on
+distributed arrays (the paper's only API delta is creation time:
+``repro.array`` / ``repro.ones`` inside a ``repro.runtime`` context).
 
     PYTHONPATH=src python examples/quickstart.py
 """
 import numpy as np
 
-from repro.core import Runtime
-from repro.core import darray as dnp
+import repro
 
 # 16 virtual processes, paper-calibrated GbE cluster model
-with Runtime(nprocs=16, block_size=64, mode="latency_hiding") as rt:
-    # --- plain NumPy-looking code ---------------------------------------
-    a = dnp.array(np.linspace(0.0, 1.0, 256 * 256).reshape(256, 256))
-    b = dnp.ones((256, 256))
-    c = dnp.sqrt(a * a + b) / 2.0          # elementwise, auto-parallel
-    d = dnp.matmul(c, c, trans_b=True)     # distributed blocked matmul
-    col_sums = d.sum(axis=0)               # distributed reduction
+with repro.runtime(nprocs=16, block_size=64) as rt:
+    # --- plain NumPy code -----------------------------------------------
+    a = repro.array(np.linspace(0.0, 1.0, 256 * 256).reshape(256, 256))
+    b = repro.ones((256, 256))
+    c = np.sqrt(a * a + b) / 2.0           # elementwise, auto-parallel
+    d = np.matmul(c, c)                    # distributed blocked matmul
+    col_sums = np.sum(d, axis=0)           # distributed reduction
     result = np.asarray(col_sums)          # readback triggers the flush
     stats = rt.stats()
 
 oracle_c = np.sqrt(
     np.linspace(0.0, 1.0, 256 * 256).reshape(256, 256) ** 2 + 1.0
 ) / 2.0
-oracle = (oracle_c @ oracle_c.T).sum(axis=0)
+oracle = (oracle_c @ oracle_c).sum(axis=0)
 np.testing.assert_allclose(result, oracle, rtol=1e-10)
 
 print("matches NumPy oracle ✓")
-print(f"schedule: {stats.summary()}")
+print(repro.format_stats([("quickstart", stats)]))
 print(f"waiting-on-comm share: {stats.wait_fraction * 100:.1f}%")

@@ -1,0 +1,59 @@
+"""repro — runtime-managed communication latency-hiding for NumPy
+programs (reproduction of cs.DC 2012, grown toward a JAX/Pallas system).
+
+The public front-end lives in :mod:`repro.api` and is re-exported here
+lazily (PEP 562), so ``import repro.kernels`` or ``import repro.core``
+never pays for — or cycles through — the API layer::
+
+    import numpy as np
+    import repro
+
+    with repro.runtime(nprocs=16, block_size=64):
+        a = repro.array(np.arange(65536.0).reshape(256, 256))
+        b = np.exp(a) + np.sum(a, axis=0)   # plain NumPy calls, recorded
+        out = np.asarray(b)                  # readback triggers the flush
+"""
+from __future__ import annotations
+
+_API_EXPORTS = (
+    "runtime",
+    "RuntimeConfig",
+    "ExecutionPolicy",
+    "Runtime",
+    "current_runtime",
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "register_channel",
+    "get_channel",
+    "available_channels",
+    "register_scheduler",
+    "get_scheduler",
+    "available_schedulers",
+    "DistArray",
+    "array",
+    "empty",
+    "zeros",
+    "ones",
+    "full",
+    "arange",
+    "random",
+    "ClusterSpec",
+    "GIGE_2012",
+    "TPU_V5E_ICI",
+    "format_stats",
+)
+
+__all__ = list(_API_EXPORTS)
+
+
+def __getattr__(name):
+    if name in _API_EXPORTS:
+        from repro import api
+
+        return getattr(api, name)
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(_API_EXPORTS))

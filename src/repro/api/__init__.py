@@ -1,0 +1,104 @@
+"""repro.api — the unified public front-end.
+
+One import surface for the paper's promise (*sequential NumPy programs,
+unmodified*) and the runtime knobs around it:
+
+* **Config objects** — :class:`RuntimeConfig` / :class:`ExecutionPolicy`
+  frozen dataclasses and the :func:`runtime` context-manager helper
+  replace the ``Runtime(...)`` kwarg soup.
+* **Registries** — ``register_backend`` / ``register_channel`` /
+  ``register_scheduler`` plug new compute backends, transports, and
+  flush schedulers in by name (``"auto"`` backend, multi-host channels,
+  …) without touching factory code.
+* **Arrays** — :class:`~repro.core.darray.DistArray` creation routines;
+  operations on the arrays themselves go through the NumPy namespace
+  (``np.add``, ``np.sum``, ``np.matmul``, …) via the array-protocol
+  dispatch implemented in ``repro.core.darray``.
+* **Reporting** — :func:`format_stats` renders simulated and measured
+  run statistics as one table.
+
+Typical program::
+
+    import numpy as np
+    import repro
+
+    with repro.runtime(nprocs=16, block_size=64) as rt:
+        a = repro.array(np.linspace(0.0, 1.0, 65536).reshape(256, 256))
+        c = np.sqrt(a * a + 1.0) / 2.0          # recorded lazily
+        result = np.asarray(np.sum(c, axis=0))  # readback flushes
+        print(repro.format_stats([("run", rt.stats())]))
+
+The array/engine names are re-exported lazily (PEP 562): the core
+modules register their plugins with :mod:`repro.api.registry` at import
+time, so the registry layer must stay importable from inside
+``repro.core`` without cycling back through the array layer.
+"""
+from .config import ExecutionPolicy, RuntimeConfig, runtime
+from .registry import (
+    available_backends,
+    available_channels,
+    available_schedulers,
+    get_backend,
+    get_channel,
+    get_scheduler,
+    register_backend,
+    register_channel,
+    register_scheduler,
+)
+from .reporting import format_stats
+
+# lazily re-exported from repro.core (avoids import cycles: core modules
+# import repro.api.registry at module level)
+_CORE_EXPORTS = {
+    "DistArray": "repro.core.darray",
+    "array": "repro.core.darray",
+    "empty": "repro.core.darray",
+    "zeros": "repro.core.darray",
+    "ones": "repro.core.darray",
+    "full": "repro.core.darray",
+    "arange": "repro.core.darray",
+    "random": "repro.core.darray",
+    "matmul": "repro.core.darray",
+    "roll": "repro.core.darray",
+    "Runtime": "repro.core.engine",
+    "current_runtime": "repro.core.engine",
+    "ClusterSpec": "repro.core.timeline",
+    "GIGE_2012": "repro.core.timeline",
+    "TPU_V5E_ICI": "repro.core.timeline",
+}
+
+__all__ = [
+    # config objects + entry point
+    "runtime",
+    "RuntimeConfig",
+    "ExecutionPolicy",
+    # registries
+    "register_backend",
+    "get_backend",
+    "available_backends",
+    "register_channel",
+    "get_channel",
+    "available_channels",
+    "register_scheduler",
+    "get_scheduler",
+    "available_schedulers",
+    # reporting
+    "format_stats",
+    # lazy core re-exports
+    *sorted(_CORE_EXPORTS),
+]
+
+
+def __getattr__(name):
+    mod = _CORE_EXPORTS.get(name)
+    if mod is not None:
+        import importlib
+
+        value = getattr(importlib.import_module(mod), name)
+        globals()[name] = value  # cache for subsequent lookups
+        return value
+    raise AttributeError(f"module {__name__!r} has no attribute {name!r}")
+
+
+def __dir__():
+    return sorted(set(globals()) | set(__all__))

@@ -1,0 +1,156 @@
+"""Declarative runtime configuration: frozen config objects replacing the
+``Runtime.__init__`` kwarg soup.
+
+Two orthogonal objects describe a run:
+
+* :class:`RuntimeConfig` — *what the arrays look like*: virtual process
+  count, distribution block size, fusion, flush threshold.  These shape
+  the recorded dependency graphs.
+* :class:`ExecutionPolicy` — *how the graphs are drained*: the flush
+  scheduler mode, simulated vs. measured flush backend, the compute
+  backend / transfer channel (resolved through
+  :mod:`repro.api.registry`), injected wire latency, and the modeled
+  :class:`~repro.core.timeline.ClusterSpec`.
+
+Both are frozen dataclasses validated at construction, with a
+``.replace()`` that re-validates — so benchmarks and examples sweep
+policies declaratively::
+
+    base = ExecutionPolicy(flush="async", channel="async", latency=10e-3)
+    for policy in (base, base.replace(channel="blocking")):
+        with repro.runtime(policy=policy) as rt:
+            ...
+
+:func:`runtime` is the one-call entry point: keyword overrides are
+routed to the right config object by field name.
+"""
+from __future__ import annotations
+
+import dataclasses
+from dataclasses import dataclass
+from typing import Optional, Union
+
+from repro.core.timeline import ClusterSpec
+
+from . import registry
+
+__all__ = ["RuntimeConfig", "ExecutionPolicy", "runtime"]
+
+
+class _Replaceable:
+    """``.replace()`` with validation: construction re-runs
+    ``__post_init__``, so an invalid override fails loudly at the call
+    site instead of at first flush."""
+
+    def replace(self, **overrides):
+        return dataclasses.replace(self, **overrides)
+
+
+@dataclass(frozen=True)
+class RuntimeConfig(_Replaceable):
+    """Array layout and recording behaviour (graph-shaping knobs)."""
+
+    nprocs: int = 4
+    block_size: Union[int, tuple] = 128
+    fusion: bool = False
+    flush_threshold: int = 200_000
+    execute: bool = True
+
+    def __post_init__(self):
+        if self.nprocs < 1:
+            raise ValueError(f"nprocs must be >= 1, got {self.nprocs}")
+        if self.flush_threshold < 1:
+            raise ValueError(
+                f"flush_threshold must be >= 1, got {self.flush_threshold}"
+            )
+        bs = self.block_size
+        sizes = (bs,) if isinstance(bs, int) else tuple(bs)
+        if not sizes or any((not isinstance(s, int)) or s < 1 for s in sizes):
+            raise ValueError(f"block_size must be positive int(s), got {bs!r}")
+
+
+@dataclass(frozen=True)
+class ExecutionPolicy(_Replaceable):
+    """How recorded graphs are drained (schedule-shaping knobs).
+
+    Names resolve through the plugin registries — a newly registered
+    backend/channel/scheduler is immediately valid here.
+    """
+
+    scheduler: str = "latency_hiding"
+    flush: str = "sim"  # "sim" (discrete-event model) | "async" (measured)
+    backend: str = "numpy"  # compute backend (async flush only)
+    channel: Optional[str] = None  # transfer channel; default follows scheduler
+    latency: Union[float, str] = 0.0  # seconds per message, or "alpha"
+    progress_threads: int = 2
+    cluster: Optional[ClusterSpec] = None
+
+    def __post_init__(self):
+        if self.scheduler not in registry.SCHEDULERS:
+            raise ValueError(
+                f"unknown scheduler {self.scheduler!r} "
+                f"(registered: {', '.join(registry.available_schedulers())})"
+            )
+        if self.flush not in ("sim", "async"):
+            raise ValueError(f"unknown flush {self.flush!r} (sim|async)")
+        if self.backend not in registry.BACKENDS:
+            raise ValueError(
+                f"unknown backend {self.backend!r} "
+                f"(registered: {', '.join(registry.available_backends())})"
+            )
+        if self.channel is not None and self.channel not in registry.CHANNELS:
+            raise ValueError(
+                f"unknown channel {self.channel!r} "
+                f"(registered: {', '.join(registry.available_channels())})"
+            )
+        if isinstance(self.latency, str) and self.latency != "alpha":
+            raise ValueError(
+                f"latency must be seconds or 'alpha', got {self.latency!r}"
+            )
+        if self.progress_threads < 1:
+            raise ValueError(
+                f"progress_threads must be >= 1, got {self.progress_threads}"
+            )
+
+    @property
+    def resolved_channel(self) -> str:
+        """The channel discipline after applying the scheduler default:
+        latency-hiding uses the non-blocking progress engine, everything
+        else the synchronous baseline."""
+        if self.channel is not None:
+            return self.channel
+        return "async" if self.scheduler == "latency_hiding" else "blocking"
+
+
+_CONFIG_FIELDS = {f.name for f in dataclasses.fields(RuntimeConfig)}
+_POLICY_FIELDS = {f.name for f in dataclasses.fields(ExecutionPolicy)}
+
+
+def runtime(
+    config: Optional[RuntimeConfig] = None,
+    policy: Optional[ExecutionPolicy] = None,
+    **overrides,
+):
+    """Build a :class:`~repro.core.engine.Runtime` from config objects —
+    the ``with repro.runtime(...):`` entry point.
+
+    Keyword overrides are routed by field name (``nprocs=8`` patches the
+    :class:`RuntimeConfig`, ``backend="auto"`` the
+    :class:`ExecutionPolicy`); an unknown name raises immediately with
+    the valid fields listed.  The returned ``Runtime`` is a context
+    manager; entering it activates it as the thread's current runtime.
+    """
+    from repro.core.engine import Runtime
+
+    cfg_kw = {k: v for k, v in overrides.items() if k in _CONFIG_FIELDS}
+    pol_kw = {k: v for k, v in overrides.items() if k in _POLICY_FIELDS}
+    unknown = set(overrides) - _CONFIG_FIELDS - _POLICY_FIELDS
+    if unknown:
+        raise TypeError(
+            f"unknown runtime option(s) {sorted(unknown)} — "
+            f"RuntimeConfig fields: {sorted(_CONFIG_FIELDS)}, "
+            f"ExecutionPolicy fields: {sorted(_POLICY_FIELDS)}"
+        )
+    config = (config or RuntimeConfig()).replace(**cfg_kw)
+    policy = (policy or ExecutionPolicy()).replace(**pol_kw)
+    return Runtime.from_config(config, policy)

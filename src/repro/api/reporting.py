@@ -1,0 +1,48 @@
+"""Unified statistics rendering for simulated and measured runs.
+
+``Runtime.stats()`` returns a
+:class:`~repro.core.timeline.TimelineResult` (discrete-event model) or a
+:class:`~repro.exec.stats.WaitStats` (wall-clock measurement).  Both
+expose the same metric properties, but their ad-hoc ``summary()``
+strings drifted apart; :func:`format_stats` renders any mix of the two
+as one table with identical columns, units, and labels, tagging each
+row ``simulated`` or ``measured`` — the single renderer used by the
+benchmark driver's real-overlap section and the stencil example.
+"""
+from __future__ import annotations
+
+__all__ = ["format_stats"]
+
+_HEADER = (
+    f"{'variant':<26s} {'source':>9s} {'makespan ms':>12s} {'wait%':>7s} "
+    f"{'speedup':>8s} {'comm MB':>8s} {'ops c/m':>12s}"
+)
+
+
+def _source_of(stats) -> str:
+    from repro.exec.stats import WaitStats
+
+    return "measured" if isinstance(stats, WaitStats) else "simulated"
+
+
+def format_stats(rows, header: bool = True) -> str:
+    """Render stats as an aligned table.
+
+    ``rows`` is an iterable of ``(label, stats)`` pairs (a single pair
+    also works), where each ``stats`` is a ``TimelineResult`` or a
+    ``WaitStats``.  Columns: makespan in ms, waiting-on-communication
+    share in %, speedup vs. sequential, communicated MB, and
+    compute/comm operation counts — the paper's two metrics plus the
+    volume columns, identical for both sources.
+    """
+    if isinstance(rows, tuple) and len(rows) == 2 and isinstance(rows[0], str):
+        rows = [rows]
+    lines = [_HEADER] if header else []
+    for label, st in rows:
+        lines.append(
+            f"{label:<26s} {_source_of(st):>9s} {st.makespan * 1e3:12.1f} "
+            f"{st.wait_fraction * 100:6.1f}% {st.speedup:8.2f} "
+            f"{st.comm_bytes / 1e6:8.2f} "
+            f"{st.n_compute_ops:>7d}/{st.n_comm_ops:<4d}"
+        )
+    return "\n".join(lines)

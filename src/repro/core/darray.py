@@ -5,6 +5,16 @@ NumPy.  All operations on :class:`DistArray` are recorded lazily into the
 active :class:`~repro.core.engine.Runtime`; reading data back (``__array__``,
 ``item``, comparisons) triggers an operation flush (§5.6).
 
+The paper's central promise — *no user-visible change to the NumPy
+programming model* — is carried by the NumPy array protocols:
+:class:`DistArray` (and :class:`Expr`) implement ``__array_ufunc__``,
+``__array_function__`` and ``__array_priority__``, so plain
+``np.add(a, b)``, ``np.exp(a)``, ``np.sum(a, axis=0)``, ``np.matmul``,
+``np.where`` and ``np.roll`` record lazily into the active runtime.  The
+ufunc registry in :mod:`repro.core.ufunc` is the single dispatch table
+(NumPy ufunc → :class:`UFunc` → backend impl); the module-level
+functions here (``add``, ``exp``, …) are generated from it.
+
 When the runtime is created with ``fusion=True``, elementwise expressions
 build :class:`Expr` trees that are merged into a single joint operation at
 materialization — the paper's §7 "merge calls to ufuncs" future work,
@@ -12,6 +22,7 @@ implemented here as a beyond-paper optimization.
 """
 from __future__ import annotations
 
+import warnings
 from typing import Optional, Sequence, Union
 
 import numpy as np
@@ -21,37 +32,22 @@ from .blocks import ViewSpec
 from .engine import ArrayBase, Runtime, current_runtime
 from .ufunc import UFunc
 
-__all__ = [
-    "DistArray",
-    "array",
-    "empty",
-    "zeros",
-    "ones",
-    "full",
-    "arange",
-    "random",
-    "add",
-    "subtract",
-    "multiply",
-    "divide",
-    "exp",
-    "log",
-    "sqrt",
-    "square",
-    "absolute",
-    "maximum",
-    "minimum",
-    "greater",
-    "less",
-    "where",
-    "matmul",
-    "dsum",
-    "dmin",
-    "dmax",
-    "roll",
-]
+Scalar = (int, float, complex, bool, np.integer, np.floating, np.complexfloating, np.bool_)
 
-Scalar = (int, float, complex, np.integer, np.floating, np.complexfloating)
+
+def _coerce_operand(x):
+    """Normalize one user-supplied operand: DistArray/Expr/scalar pass
+    through, host ndarrays are scattered into a DistArray, 0-d arrays
+    become scalars.  Returns None for unsupported types."""
+    if isinstance(x, (DistArray, Expr)) or isinstance(x, Scalar):
+        return x
+    if isinstance(x, np.ndarray):
+        if x.ndim == 0:
+            return x[()]
+        return array(x)
+    if isinstance(x, (list, tuple)):
+        return array(np.asarray(x))
+    return None
 
 
 def _as_operand(x):
@@ -65,7 +61,10 @@ def _as_operand(x):
     raise TypeError(f"unsupported operand {type(x)}")
 
 
-def _result_meta(args) -> tuple[tuple[int, ...], np.dtype]:
+def _result_meta(ufn: Optional[UFunc], args) -> tuple[tuple[int, ...], np.dtype]:
+    """(broadcast shape, result dtype) of applying ``ufn`` to ``args``;
+    the ufunc's fixed ``out_dtype`` (comparisons -> bool) overrides NumPy
+    promotion."""
     shapes, dtypes = [], []
     for a in args:
         if isinstance(a, (DistArray, Expr)):
@@ -74,8 +73,87 @@ def _result_meta(args) -> tuple[tuple[int, ...], np.dtype]:
         else:
             dtypes.append(np.dtype(type(a)) if not isinstance(a, complex) else np.dtype(complex))
     shape = np.broadcast_shapes(*shapes) if shapes else ()
-    dtype = np.result_type(*dtypes)
+    if ufn is not None and ufn.out_dtype is not None:
+        dtype = np.dtype(ufn.out_dtype)
+    else:
+        dtype = np.result_type(*dtypes)
     return tuple(shape), dtype
+
+
+# ---------------------------------------------------------------------------
+# NumPy protocol dispatch (shared by DistArray and Expr)
+# ---------------------------------------------------------------------------
+
+# np functions that are not np.ufuncs dispatch through
+# ``__array_function__``; handlers registered below with @_implements
+_HANDLED_FUNCTIONS: dict = {}
+
+
+def _implements(*np_funcs):
+    def deco(fn):
+        for f in np_funcs:
+            _HANDLED_FUNCTIONS[f] = fn
+        return fn
+
+    return deco
+
+
+# ufunc.reduce method -> the engine's reduceable ufunc name
+_REDUCE_UFUNCS = {np.add: "add", np.minimum: "minimum", np.maximum: "maximum"}
+
+
+def _array_ufunc(self, ufunc, method, *inputs, **kwargs):
+    """Shared ``__array_ufunc__``: resolve the NumPy ufunc through the
+    registry (ufunc.py is the single dispatch table) and record lazily."""
+    out = kwargs.pop("out", None)
+    if method == "__call__":
+        if ufunc is np.matmul:
+            if kwargs or out is not None:
+                return NotImplemented
+            a, b = (_coerce_operand(x) for x in inputs)
+            if a is None or b is None:
+                return NotImplemented
+            return matmul(a, b)
+        u = uf.NP_TO_UFUNC.get(ufunc)
+        if u is None or kwargs:
+            return NotImplemented
+        args = [_coerce_operand(x) for x in inputs]
+        if any(a is None for a in args):
+            return NotImplemented
+        if out is not None:
+            target = out[0] if isinstance(out, tuple) else out
+            if not isinstance(target, DistArray) or (
+                isinstance(out, tuple) and len(out) != 1
+            ):
+                return NotImplemented
+            rt = current_runtime()
+            if rt.fusion:
+                Expr(u, tuple(args)).materialize(out=target)
+            else:
+                rt.record_map(
+                    u, (target._base, target._view), [_as_operand(a) for a in args]
+                )
+            return target
+        return _apply(u, *args)
+    if method == "reduce":
+        name = _REDUCE_UFUNCS.get(ufunc)
+        axis = kwargs.pop("axis", 0)
+        keepdims = kwargs.pop("keepdims", False)
+        if name is None or out is not None or kwargs.pop("dtype", None) is not None:
+            return NotImplemented
+        if kwargs:
+            return NotImplemented
+        (a,) = inputs
+        a = a.materialize() if isinstance(a, Expr) else a
+        return a._reduce(name, axis, keepdims)
+    return NotImplemented
+
+
+def _array_function(self, func, types, args, kwargs):
+    impl = _HANDLED_FUNCTIONS.get(func)
+    if impl is None:
+        return NotImplemented
+    return impl(*args, **kwargs)
 
 
 class Expr:
@@ -83,10 +161,18 @@ class Expr:
 
     __slots__ = ("ufunc", "args", "shape", "dtype")
 
+    __array_priority__ = 1000.0
+    __array_ufunc__ = _array_ufunc
+    __array_function__ = _array_function
+
     def __init__(self, ufunc: UFunc, args: tuple):
         self.ufunc = ufunc
         self.args = args
-        self.shape, self.dtype = _result_meta(args)
+        self.shape, self.dtype = _result_meta(ufunc, args)
+
+    @property
+    def ndim(self) -> int:
+        return len(self.shape)
 
     # -- fusion ---------------------------------------------------------
     def _collect(self, leaves: list) -> object:
@@ -155,6 +241,19 @@ class Expr:
     def __array__(self, dtype=None, copy=None):
         return self.materialize().__array__(dtype)
 
+    # -- reductions (np.sum(expr) etc. land here via the protocols) --------
+    def _reduce(self, name: str, axis, keepdims: bool) -> "DistArray":
+        return self.materialize()._reduce(name, axis, keepdims)
+
+    def sum(self, axis=None, keepdims=False):
+        return self._reduce("add", axis, keepdims)
+
+    def min(self, axis=None, keepdims=False):
+        return self._reduce("minimum", axis, keepdims)
+
+    def max(self, axis=None, keepdims=False):
+        return self._reduce("maximum", axis, keepdims)
+
     # -- operator sugar (mirrors DistArray) -------------------------------
     def __add__(self, o):
         return _apply(uf.add, self, o)
@@ -190,10 +289,17 @@ class Expr:
 def _apply(ufn: UFunc, *args) -> Union["DistArray", Expr]:
     """Apply a ufunc: build an Expr in fusion mode, else record immediately
     into a fresh temporary (DistNumPy behaviour)."""
+    coerced = []
+    for a in args:
+        c = _coerce_operand(a)
+        if c is None:
+            raise TypeError(f"unsupported operand {type(a)} for {ufn.name}")
+        coerced.append(c)
+    args = tuple(coerced)
     rt = current_runtime()
     if rt.fusion:
         return Expr(ufn, args)
-    shape, dtype = _result_meta(args)
+    shape, dtype = _result_meta(ufn, args)
     out = empty(shape, dtype=dtype)
     rt.record_map(ufn, (out._base, out._view), [_as_operand(a) for a in args])
     return out
@@ -203,6 +309,12 @@ class DistArray:
     """An array-view over an array-base (paper §5.1)."""
 
     __slots__ = ("_base", "_view", "_rt")
+
+    # NumPy defers to us for mixed ndarray/DistArray expressions, and
+    # np.<ufunc>/np.<function> calls dispatch through the protocols.
+    __array_priority__ = 1000.0
+    __array_ufunc__ = _array_ufunc
+    __array_function__ = _array_function
 
     def __init__(self, base: ArrayBase, view: ViewSpec, rt: Runtime):
         self._base = base
@@ -310,6 +422,9 @@ class DistArray:
     def __neg__(self):
         return _apply(uf.negative, self)
 
+    def __matmul__(self, o):
+        return matmul(self, o)
+
     def __iadd__(self, o):
         self._rt.record_map(
             uf.add, (self._base, self._view), [_as_operand(self), _as_operand(o)]
@@ -341,7 +456,12 @@ class DistArray:
             oshape = tuple(1 if d in axes else s for d, s in enumerate(self.shape))
         else:
             oshape = tuple(s for d, s in enumerate(self.shape) if d not in axes)
-        out = empty(oshape, dtype=self.dtype)
+        # NumPy promotes bool sums to integer counts (np.sum(a > x) is the
+        # counting idiom); min/max of bools stay bool
+        rdtype = self.dtype
+        if rdtype == np.bool_ and name == "add":
+            rdtype = np.dtype(np.int64)
+        out = empty(oshape, dtype=rdtype)
         self._rt.record_reduce(
             name, (out._base, out._view), (self._base, self._view), axes, keepdims
         )
@@ -434,82 +554,39 @@ def random(shape, seed=0, dtype=np.float64, block_shape=None) -> DistArray:
 
 
 # ---------------------------------------------------------------------------
-# module-level ufuncs / linalg / reductions
+# module-level ufuncs — generated from the registry (single dispatch
+# table: adding a primitive to ufunc.py adds it here and to np.<ufunc>
+# dispatch in one step)
 # ---------------------------------------------------------------------------
 
-def add(a, b):
-    return _apply(uf.add, a, b)
+def _module_ufunc(u: UFunc):
+    def f(*args):
+        if len(args) != u.nin:
+            raise TypeError(f"{u.name} expects {u.nin} operand(s), got {len(args)}")
+        return _apply(u, *args)
+
+    f.__name__ = u.name
+    f.__qualname__ = u.name
+    f.__doc__ = (
+        f"Record ``{u.name}`` lazily on DistArrays (generated from the "
+        f"ufunc registry; ``np.{u.name}`` on DistArray operands is the "
+        f"canonical spelling)."
+    )
+    return f
 
 
-def subtract(a, b):
-    return _apply(uf.subtract, a, b)
+_GENERATED_UFUNCS = [n for n in uf.UFUNCS if n != "identity"]
+for _name in _GENERATED_UFUNCS:
+    globals()[_name] = _module_ufunc(uf.UFUNCS[_name])
 
 
-def multiply(a, b):
-    return _apply(uf.multiply, a, b)
-
-
-def divide(a, b):
-    return _apply(uf.divide, a, b)
-
-
-def exp(a):
-    return _apply(uf.exp, a)
-
-
-def log(a):
-    return _apply(uf.log, a)
-
-
-def sqrt(a):
-    return _apply(uf.sqrt, a)
-
-
-def square(a):
-    return _apply(uf.square, a)
-
-
-def absolute(a):
-    return _apply(uf.absolute, a)
-
-
-def maximum(a, b):
-    return _apply(uf.maximum, a, b)
-
-
-def minimum(a, b):
-    return _apply(uf.minimum, a, b)
-
-
-def greater(a, b):
-    return _apply(uf.greater, a, b)
-
-
-def less(a, b):
-    return _apply(uf.less, a, b)
-
-
-def where(c, a, b):
-    return _apply(uf.where, c, a, b)
-
-
-def dsum(a, axis=None, keepdims=False):
-    a = a.materialize() if isinstance(a, Expr) else a
-    return a.sum(axis, keepdims)
-
-
-def dmin(a, axis=None, keepdims=False):
-    a = a.materialize() if isinstance(a, Expr) else a
-    return a.min(axis, keepdims)
-
-
-def dmax(a, axis=None, keepdims=False):
-    a = a.materialize() if isinstance(a, Expr) else a
-    return a.max(axis, keepdims)
-
+# ---------------------------------------------------------------------------
+# linalg / data movement
+# ---------------------------------------------------------------------------
 
 def matmul(a, b, trans_a=False, trans_b=False) -> DistArray:
     rt = current_runtime()
+    a, b = _coerce_operand(a), _coerce_operand(b)
     a = a.materialize() if isinstance(a, Expr) else a
     b = b.materialize() if isinstance(b, Expr) else b
     M = a.shape[1] if trans_a else a.shape[0]
@@ -529,9 +606,10 @@ def matmul(a, b, trans_a=False, trans_b=False) -> DistArray:
     return out
 
 
-def roll(a: DistArray, shift: int, axis: int = 0) -> DistArray:
+def roll(a, shift: int, axis: int = 0) -> DistArray:
     """np.roll equivalent: two strided copies (used by the LBM streaming
     step).  C[..., s:, ...] = A[..., :-s, ...]; C[..., :s, ...] = A[..., n-s:, ...]."""
+    a = _coerce_operand(a)
     a = a.materialize() if isinstance(a, Expr) else a
     n = a.shape[axis]
     s = shift % n
@@ -548,3 +626,100 @@ def roll(a: DistArray, shift: int, axis: int = 0) -> DistArray:
     out[sl(s, n)] = a[sl(0, n - s)]
     out[sl(0, s)] = a[sl(n - s, n)]
     return out
+
+
+# ---------------------------------------------------------------------------
+# __array_function__ handlers: the np-namespace spellings of the
+# reductions / data movement above
+# ---------------------------------------------------------------------------
+
+def _as_lazy(x):
+    c = _coerce_operand(x)
+    if c is None:
+        raise TypeError(f"unsupported operand {type(x)}")
+    return c.materialize() if isinstance(c, Expr) else c
+
+
+@_implements(np.sum)
+def _np_sum(a, axis=None, dtype=None, out=None, keepdims=False, **kw):
+    if dtype is not None or out is not None or kw:
+        raise TypeError("np.sum on DistArray supports only axis= and keepdims=")
+    return _as_lazy(a)._reduce("add", axis, keepdims)
+
+
+@_implements(np.min, np.amin)
+def _np_min(a, axis=None, out=None, keepdims=False, **kw):
+    if out is not None or kw:
+        raise TypeError("np.min on DistArray supports only axis= and keepdims=")
+    return _as_lazy(a)._reduce("minimum", axis, keepdims)
+
+
+@_implements(np.max, np.amax)
+def _np_max(a, axis=None, out=None, keepdims=False, **kw):
+    if out is not None or kw:
+        raise TypeError("np.max on DistArray supports only axis= and keepdims=")
+    return _as_lazy(a)._reduce("maximum", axis, keepdims)
+
+
+@_implements(np.where)
+def _np_where(condition, x=None, y=None):
+    if x is None or y is None:
+        raise TypeError("np.where(cond) without x/y is eager; unsupported on DistArray")
+    return _apply(uf.where, condition, x, y)
+
+
+@_implements(np.roll)
+def _np_roll(a, shift, axis=None):
+    if axis is None:
+        raise TypeError("np.roll on DistArray requires an explicit axis")
+    return roll(a, shift, axis)
+
+
+@_implements(np.matmul)
+def _np_matmul(a, b, **kw):
+    if kw:
+        raise TypeError("np.matmul on DistArray supports no keyword arguments")
+    return matmul(a, b)
+
+
+# ---------------------------------------------------------------------------
+# deprecated repro-specific aliases (pre-protocol API); the canonical
+# spellings are np.sum / np.min / np.max on the DistArray itself
+# ---------------------------------------------------------------------------
+
+def _deprecated_reduction(old: str, name: str, new: str):
+    def shim(a, axis=None, keepdims=False):
+        warnings.warn(
+            f"repro.core.darray.{old} is deprecated; use {new} instead",
+            DeprecationWarning,
+            stacklevel=2,
+        )
+        return _as_lazy(a)._reduce(name, axis, keepdims)
+
+    shim.__name__ = old
+    shim.__qualname__ = old
+    shim.__doc__ = f"Deprecated alias of ``{new}``."
+    return shim
+
+
+dsum = _deprecated_reduction("dsum", "add", "np.sum(a) or a.sum()")
+dmin = _deprecated_reduction("dmin", "minimum", "np.min(a) or a.min()")
+dmax = _deprecated_reduction("dmax", "maximum", "np.max(a) or a.max()")
+
+
+__all__ = [
+    "DistArray",
+    "array",
+    "empty",
+    "zeros",
+    "ones",
+    "full",
+    "arange",
+    "random",
+    "matmul",
+    "roll",
+    "dsum",
+    "dmin",
+    "dmax",
+    *_GENERATED_UFUNCS,
+]

@@ -32,7 +32,7 @@ from .blocks import (
     fragment_iteration_space,
 )
 from .graph import COMM, COMPUTE, AccessNode, DependencySystem, OperationNode
-from .scheduler import run_schedule
+from .scheduler import run_schedule  # noqa: F401  (registers the built-in modes)
 from .timeline import GIGE_2012, ClusterSpec, TimelineResult
 from .ufunc import UFunc, get_ufunc, reduce_fn
 
@@ -237,18 +237,26 @@ class Runtime:
         self.exec_channel = exec_channel or (
             "async" if mode == "latency_hiding" else "blocking"
         )
-        if flush_backend == "async":
-            # fail at construction, not at the first flush mid-program
-            from repro.exec.backend import _BACKENDS
+        # fail at construction, not at the first flush mid-program; names
+        # resolve through the plugin registries (repro.api.registry), so a
+        # freshly registered scheduler/backend/channel is valid here too
+        from repro.api.registry import BACKENDS, CHANNELS, SCHEDULERS
 
-            if exec_backend not in _BACKENDS:
+        if mode not in SCHEDULERS:
+            raise ValueError(
+                f"unknown mode {mode!r} "
+                f"(registered schedulers: {', '.join(SCHEDULERS.available())})"
+            )
+        if flush_backend == "async":
+            if isinstance(exec_backend, str) and exec_backend not in BACKENDS:
                 raise ValueError(
                     f"unknown exec_backend {exec_backend!r} "
-                    f"(expected one of {sorted(_BACKENDS)})"
+                    f"(registered: {', '.join(BACKENDS.available())})"
                 )
-            if self.exec_channel not in ("async", "blocking"):
+            if isinstance(self.exec_channel, str) and self.exec_channel not in CHANNELS:
                 raise ValueError(
-                    f"unknown exec_channel {self.exec_channel!r} (async|blocking)"
+                    f"unknown exec_channel {self.exec_channel!r} "
+                    f"(registered: {', '.join(CHANNELS.available())})"
                 )
         if isinstance(exec_latency, str):
             from repro.comm.emulation import resolve_latency
@@ -274,6 +282,32 @@ class Runtime:
         self.flush_count = 0
         self._recorded_since_flush = 0
         self._in_record = 0
+
+    @classmethod
+    def from_config(cls, config=None, policy=None) -> "Runtime":
+        """Build a Runtime from :class:`~repro.api.config.RuntimeConfig`
+        (array layout / recording) and
+        :class:`~repro.api.config.ExecutionPolicy` (scheduling /
+        backends) — the config-object front door; ``repro.runtime(...)``
+        wraps this."""
+        from repro.api.config import ExecutionPolicy, RuntimeConfig
+
+        config = config if config is not None else RuntimeConfig()
+        policy = policy if policy is not None else ExecutionPolicy()
+        return cls(
+            nprocs=config.nprocs,
+            block_size=config.block_size,
+            mode=policy.scheduler,
+            cluster=policy.cluster,
+            flush_threshold=config.flush_threshold,
+            execute=config.execute,
+            fusion=config.fusion,
+            flush_backend=policy.flush,
+            exec_backend=policy.backend,
+            exec_channel=policy.resolved_channel,
+            exec_latency=policy.latency,
+            exec_progress_threads=policy.progress_threads,
+        )
 
     # -- context management -------------------------------------------------
     def __enter__(self):
@@ -619,10 +653,11 @@ class Runtime:
         if self.flush_backend == "async":
             res = self._flush_async()
         else:
-            res = run_schedule(
+            from repro.api.registry import get_scheduler
+
+            res = get_scheduler(self.mode)(
                 self.deps,
                 self.cluster,
-                mode=self.mode,
                 executor=self._execute if self.execute else None,
             )
             self.result.merge(res)

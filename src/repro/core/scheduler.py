@@ -27,6 +27,8 @@ import heapq
 import itertools
 from typing import Callable, Optional
 
+from repro.api.registry import register_scheduler
+
 from .graph import COMM, COMPUTE, DependencySystem, OperationNode
 from .timeline import ClusterSpec, TimelineResult
 
@@ -141,6 +143,21 @@ def run_schedule(
             "cycle.\nstuck operation-nodes:\n" + format_stuck_ops(stuck)
         )
     return res
+
+
+# The two paper modes are the built-in entries of the scheduler
+# registry; Runtime.flush resolves ``mode`` through it, so alternative
+# flush disciplines plug in with one register_scheduler call.
+def _registered_mode(mode: str):
+    def scheduler(deps, cluster, executor=None):
+        return run_schedule(deps, cluster, mode=mode, executor=executor)
+
+    scheduler.__name__ = f"run_schedule[{mode}]"
+    return scheduler
+
+
+register_scheduler("latency_hiding", _registered_mode("latency_hiding"))
+register_scheduler("blocking", _registered_mode("blocking"))
 
 
 # ---------------------------------------------------------------------------

@@ -54,6 +54,13 @@ class ClusterSpec:
             self.name,
         )
 
+    def replace(self, **overrides) -> "ClusterSpec":
+        """Derive a variant spec (same contract as the api config
+        objects' ``.replace()``)."""
+        import dataclasses
+
+        return dataclasses.replace(self, **overrides)
+
 
 # Paper testbed: Gigabit Ethernet, Xeon E5345 (2.33 GHz).  elem_time is
 # calibrated to ~3 × 10^8 double-precision ufunc elements/s/core (NumPy-era

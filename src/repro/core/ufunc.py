@@ -1,19 +1,41 @@
-"""Universal-function registry (paper §5.3).
+"""Universal-function registry (paper §5.3) — the single dispatch table.
 
 A ufunc is a vectorized scalar function applied independently to every
 element of the involved array-views; the engine translates a ufunc
 application into per-sub-view-block operations.  ``cost`` is the relative
 per-element compute weight used by the timeline model (memory-bound ufuncs
 ≈ 1, transcendentals higher — calibrated against NumPy throughput ratios).
+
+Every primitive is registered once here and every consumer derives from
+this table:
+
+* the NumPy array protocol on :class:`~repro.core.darray.DistArray`
+  resolves ``np.add`` → :data:`NP_TO_UFUNC` → :class:`UFunc`;
+* ``repro.core.darray`` generates its module-level functions from
+  :data:`UFUNCS`;
+* alternative compute backends retarget by name (or re-trace fused
+  expression trees via :func:`eval_tree`).
+
+``out_dtype`` carries a fixed result dtype for primitives whose output
+dtype is not the promoted input dtype — the comparisons return
+``bool``, exactly as NumPy's do.  The timeline cost model is untouched
+by dtype routing (costs stay per-element).
 """
 from __future__ import annotations
 
 from dataclasses import dataclass
-from typing import Callable
+from typing import Callable, Optional
 
 import numpy as np
 
-__all__ = ["UFunc", "UFUNCS", "get_ufunc", "eval_tree"]
+__all__ = [
+    "UFunc",
+    "UFUNCS",
+    "NP_TO_UFUNC",
+    "get_ufunc",
+    "result_dtype",
+    "eval_tree",
+]
 
 
 @dataclass(frozen=True)
@@ -28,9 +50,21 @@ class UFunc:
     # expression with their own primitive implementations instead of
     # calling the opaque NumPy closure.
     tree: object = None
+    # fixed result dtype (e.g. bool for comparisons); None means NumPy
+    # promotion of the input dtypes
+    out_dtype: object = None
 
     def __call__(self, *args):
         return self.fn(*args)
+
+
+def result_dtype(ufunc: "UFunc", dtypes) -> np.dtype:
+    """Result dtype of applying ``ufunc`` to operands of ``dtypes`` —
+    the ufunc's fixed ``out_dtype`` if it has one, NumPy promotion
+    otherwise."""
+    if ufunc.out_dtype is not None:
+        return np.dtype(ufunc.out_dtype)
+    return np.result_type(*dtypes)
 
 
 def eval_tree(spec, arrays, impl: Callable[["UFunc"], Callable]):
@@ -52,30 +86,44 @@ def eval_tree(spec, arrays, impl: Callable[["UFunc"], Callable]):
 
 UFUNCS: dict[str, UFunc] = {}
 
+# NumPy ufunc object -> our UFunc: the table behind DistArray's
+# ``__array_ufunc__`` (np.add(a, b) records uf.add lazily)
+NP_TO_UFUNC: dict[np.ufunc, UFunc] = {}
 
-def _reg(name, fn, nin, cost=1.0, reduceable=False):
-    uf = UFunc(name, fn, nin, cost, reduceable)
+
+def _reg(
+    name,
+    fn,
+    nin,
+    cost=1.0,
+    reduceable=False,
+    np_ufunc: Optional[np.ufunc] = None,
+    out_dtype=None,
+):
+    uf = UFunc(name, fn, nin, cost, reduceable, out_dtype=out_dtype)
     UFUNCS[name] = uf
+    if np_ufunc is not None:
+        NP_TO_UFUNC[np_ufunc] = uf
     return uf
 
 
 identity = _reg("identity", lambda x: x, 1, 1.0)
-add = _reg("add", np.add, 2, 1.0, reduceable=True)
-subtract = _reg("subtract", np.subtract, 2, 1.0)
-multiply = _reg("multiply", np.multiply, 2, 1.0, reduceable=True)
-divide = _reg("divide", np.divide, 2, 2.0)
-power = _reg("power", np.power, 2, 8.0)
-negative = _reg("negative", np.negative, 1, 1.0)
-absolute = _reg("absolute", np.absolute, 1, 1.0)
-exp = _reg("exp", np.exp, 1, 4.0)
-log = _reg("log", np.log, 1, 4.0)
-sqrt = _reg("sqrt", np.sqrt, 1, 2.0)
-square = _reg("square", np.square, 1, 1.0)
-maximum = _reg("maximum", np.maximum, 2, 1.0, reduceable=True)
-minimum = _reg("minimum", np.minimum, 2, 1.0, reduceable=True)
-greater = _reg("greater", lambda a, b: np.greater(a, b).astype(np.float64), 2, 1.0)
-less = _reg("less", lambda a, b: np.less(a, b).astype(np.float64), 2, 1.0)
-where = _reg("where", np.where, 3, 1.0)
+add = _reg("add", np.add, 2, 1.0, reduceable=True, np_ufunc=np.add)
+subtract = _reg("subtract", np.subtract, 2, 1.0, np_ufunc=np.subtract)
+multiply = _reg("multiply", np.multiply, 2, 1.0, reduceable=True, np_ufunc=np.multiply)
+divide = _reg("divide", np.divide, 2, 2.0, np_ufunc=np.divide)
+power = _reg("power", np.power, 2, 8.0, np_ufunc=np.power)
+negative = _reg("negative", np.negative, 1, 1.0, np_ufunc=np.negative)
+absolute = _reg("absolute", np.absolute, 1, 1.0, np_ufunc=np.absolute)
+exp = _reg("exp", np.exp, 1, 4.0, np_ufunc=np.exp)
+log = _reg("log", np.log, 1, 4.0, np_ufunc=np.log)
+sqrt = _reg("sqrt", np.sqrt, 1, 2.0, np_ufunc=np.sqrt)
+square = _reg("square", np.square, 1, 1.0, np_ufunc=np.square)
+maximum = _reg("maximum", np.maximum, 2, 1.0, reduceable=True, np_ufunc=np.maximum)
+minimum = _reg("minimum", np.minimum, 2, 1.0, reduceable=True, np_ufunc=np.minimum)
+greater = _reg("greater", np.greater, 2, 1.0, np_ufunc=np.greater, out_dtype=np.bool_)
+less = _reg("less", np.less, 2, 1.0, np_ufunc=np.less, out_dtype=np.bool_)
+where = _reg("where", np.where, 3, 1.0)  # np.where is not a np.ufunc
 
 _REDUCE_INIT = {"add": 0.0, "multiply": 1.0, "maximum": -np.inf, "minimum": np.inf}
 _REDUCE_NP = {

@@ -20,6 +20,7 @@ Select it per runtime: ``Runtime(..., flush_backend="async")``.
 """
 from .backend import (
     AsyncExecutor,
+    AutoBackend,
     ComputeBackend,
     JaxBackend,
     NumpyBackend,
@@ -36,6 +37,7 @@ __all__ = [
     "ComputeBackend",
     "NumpyBackend",
     "JaxBackend",
+    "AutoBackend",
     "make_backend",
     "run_rendezvous_bsp_async",
     "AsyncChannel",

@@ -36,6 +36,7 @@ from typing import Optional
 
 import numpy as np
 
+from repro.api.registry import get_backend, register_backend
 from repro.core.engine import MapPayload, MatmulPayload, execute_payload, resolve_ref
 from repro.core.graph import COMM, DependencySystem, OperationNode
 from repro.core.scheduler import DeadlockError, format_stuck_ops
@@ -48,6 +49,7 @@ __all__ = [
     "ComputeBackend",
     "NumpyBackend",
     "JaxBackend",
+    "AutoBackend",
     "make_backend",
     "AsyncExecutor",
     "run_rendezvous_bsp_async",
@@ -125,8 +127,10 @@ class JaxBackend(ComputeBackend):
             "square": jnp.square,
             "maximum": jnp.maximum,
             "minimum": jnp.minimum,
-            "greater": lambda a, b: jnp.greater(a, b).astype(jnp.float32),
-            "less": lambda a, b: jnp.less(a, b).astype(jnp.float32),
+            # comparisons carry a real bool result dtype (UFunc.out_dtype),
+            # matching NumPy — no float cast
+            "greater": jnp.greater,
+            "less": jnp.less,
             "where": jnp.where,
         }
         self._jit_cache: dict = {}
@@ -305,19 +309,83 @@ class JaxBackend(ComputeBackend):
         blk[p.out_frag.slices] = res
 
 
-_BACKENDS = {"numpy": NumpyBackend, "jax": JaxBackend}
+class AutoBackend(ComputeBackend):
+    """Per-payload backend choice — the first registry client beyond the
+    two reference backends (ROADMAP "backend autotuning").
+
+    Small block payloads stay on the eager NumPy interpreter (XLA
+    dispatch + host↔device staging costs more than the arithmetic);
+    payloads whose estimated per-element work clears ``threshold`` go to
+    the jit-compiling :class:`JaxBackend` (including its Pallas stencil
+    fast path).  The score is ``out_elements × ufunc cost`` for maps and
+    output elements for matmuls — the same per-element weights the
+    timeline model uses, so the choice needs no calibration run.  The
+    JAX backend is built lazily on the first heavy payload and the
+    choice is a pure function of the payload, so repeated drains of the
+    same graph route identically (results stay deterministic across
+    channel disciplines).
+    """
+
+    name = "auto"
+
+    # default: a 128×128 float64 block of cost-4 (transcendental) work
+    # clears it, a cost-1 copy/add block does not
+    DEFAULT_THRESHOLD = 48_000
+
+    def __init__(self, storage: dict, scratch: dict, threshold: int = DEFAULT_THRESHOLD):
+        super().__init__(storage, scratch)
+        self.threshold = threshold
+        self._numpy = NumpyBackend(storage, scratch)
+        self._jax: Optional[JaxBackend] = None
+        self._jax_unavailable = False
+        self.n_numpy = 0
+        self.n_jax = 0
+
+    def _jax_backend(self) -> Optional[JaxBackend]:
+        if self._jax is None and not self._jax_unavailable:
+            try:
+                self._jax = JaxBackend(self.storage, self.scratch)
+            except ImportError as exc:  # no usable jax: degrade to NumPy
+                self._jax_unavailable = True
+                import warnings
+
+                warnings.warn(
+                    f"backend='auto': jax unavailable ({exc}); all payloads "
+                    f"will run on the NumPy interpreter",
+                    RuntimeWarning,
+                    stacklevel=3,
+                )
+        return self._jax
+
+    def _score(self, p) -> float:
+        if isinstance(p, MapPayload):
+            return p.out_frag.size * max(1.0, p.ufunc.cost)
+        if isinstance(p, MatmulPayload):
+            return float(p.out_frag.size)
+        return 0.0  # transfers/reductions/fills: memory movement, stay eager
+
+    def execute(self, op: OperationNode) -> None:
+        if self._score(op.payload) >= self.threshold:
+            jb = self._jax_backend()
+            if jb is not None:
+                self.n_jax += 1
+                jb.execute(op)
+                return
+        self.n_numpy += 1
+        self._numpy.execute(op)
+
+
+register_backend("numpy", NumpyBackend)
+register_backend("jax", JaxBackend)
+register_backend("auto", AutoBackend)
 
 
 def make_backend(name, storage: dict, scratch: dict) -> ComputeBackend:
+    """Resolve a compute backend through the plugin registry (an
+    already-built instance passes through)."""
     if isinstance(name, ComputeBackend):
         return name
-    try:
-        cls = _BACKENDS[name]
-    except KeyError:
-        raise ValueError(
-            f"unknown exec backend {name!r} (expected one of {sorted(_BACKENDS)})"
-        ) from None
-    return cls(storage, scratch)
+    return get_backend(name)(storage, scratch)
 
 
 # ---------------------------------------------------------------------------

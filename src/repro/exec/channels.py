@@ -35,6 +35,8 @@ import threading
 import time
 from typing import Callable, Optional
 
+from repro.api.registry import get_channel, register_channel
+
 from .futures import Future
 
 __all__ = ["AsyncChannel", "BlockingChannel", "RendezvousMailbox", "make_channel"]
@@ -146,14 +148,28 @@ class BlockingChannel:
         pass
 
 
+# Registry entries take the full keyword set; disciplines that don't use
+# a knob (the blocking channel has no progress engine) ignore it, so one
+# factory signature covers every transport — including the ROADMAP's
+# future multi-host channels.
+register_channel(
+    "async",
+    lambda *, latency=0.0, progress_threads=2: AsyncChannel(
+        progress_threads=progress_threads, latency=latency
+    ),
+)
+register_channel(
+    "blocking",
+    lambda *, latency=0.0, progress_threads=2: BlockingChannel(latency=latency),
+)
+
+
 def make_channel(name, *, latency: float = 0.0, progress_threads: int = 2):
-    if not isinstance(name, str):  # an already-built (possibly shared) channel
+    """Resolve a transfer channel through the plugin registry (an
+    already-built — possibly shared — channel passes through)."""
+    if not isinstance(name, str):
         return name
-    if name == "async":
-        return AsyncChannel(progress_threads=progress_threads, latency=latency)
-    if name == "blocking":
-        return BlockingChannel(latency=latency)
-    raise ValueError(f"unknown channel discipline {name!r} (async|blocking)")
+    return get_channel(name)(latency=latency, progress_threads=progress_threads)
 
 
 # ---------------------------------------------------------------------------

@@ -7,7 +7,7 @@ memory would not fit HBM — the de-facto large-scale practice.
 Distributed-optimization hooks:
 
 * ``grad_transform`` — applied to the gradient pytree *before* the
-  update; used by ``repro.runtime.compression`` to plug in int8 /
+  update; used by ``repro.resilience.compression`` to plug in int8 /
   top-k error-feedback compression of the cross-pod all-reduce.
 * the update is shape-preserving and elementwise, so it shards under
   whatever PartitionSpec the parameters carry (FSDP-friendly).

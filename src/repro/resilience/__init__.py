@@ -1,4 +1,4 @@
-"""repro.runtime — fault tolerance, elasticity, straggler mitigation,
+"""repro.resilience — fault tolerance, elasticity, straggler mitigation,
 gradient compression for the cross-pod axis."""
 from .compression import int8_compress_transform, topk_ef_transform
 from .fault_tolerance import (

@@ -1,0 +1,275 @@
+"""repro.api: config objects, the runtime() entry point, the plugin
+registries (backend/channel/scheduler), the auto backend, unified stats
+rendering, and the deprecated legacy shims."""
+import numpy as np
+import pytest
+
+import repro
+from repro.api import ExecutionPolicy, RuntimeConfig, format_stats
+from repro.api.registry import BACKENDS, CHANNELS, SCHEDULERS
+
+
+# ---------------------------------------------------------------------------
+# config objects
+# ---------------------------------------------------------------------------
+
+
+def test_configs_are_frozen_and_validated():
+    cfg = RuntimeConfig(nprocs=8, block_size=32)
+    with pytest.raises(Exception):  # frozen dataclass
+        cfg.nprocs = 2
+    with pytest.raises(ValueError):
+        RuntimeConfig(nprocs=0)
+    with pytest.raises(ValueError):
+        RuntimeConfig(block_size=0)
+    with pytest.raises(ValueError):
+        ExecutionPolicy(flush="nope")
+    with pytest.raises(ValueError):
+        ExecutionPolicy(backend="nope")
+    with pytest.raises(ValueError):
+        ExecutionPolicy(channel="nope")
+    with pytest.raises(ValueError):
+        ExecutionPolicy(scheduler="nope")
+    with pytest.raises(ValueError):
+        ExecutionPolicy(latency="beta")
+
+
+def test_replace_revalidates():
+    pol = ExecutionPolicy()
+    assert pol.replace(backend="jax").backend == "jax"
+    with pytest.raises(ValueError):
+        pol.replace(backend="definitely-not-registered")
+    cfg = RuntimeConfig()
+    assert cfg.replace(nprocs=2).nprocs == 2
+    assert cfg.nprocs == 4  # original untouched
+    with pytest.raises(ValueError):
+        cfg.replace(nprocs=-1)
+
+
+def test_resolved_channel_follows_scheduler():
+    assert ExecutionPolicy().resolved_channel == "async"
+    assert ExecutionPolicy(scheduler="blocking").resolved_channel == "blocking"
+    assert ExecutionPolicy(channel="blocking").resolved_channel == "blocking"
+
+
+def test_runtime_helper_routes_overrides():
+    with repro.runtime(nprocs=2, block_size=5, scheduler="blocking") as rt:
+        assert rt.nprocs == 2
+        assert rt.block_size == 5
+        assert rt.mode == "blocking"
+        a = repro.ones((6, 6))
+        got = np.asarray(a + 1.0)
+    np.testing.assert_array_equal(got, np.full((6, 6), 2.0))
+
+
+def test_runtime_helper_rejects_unknown_option():
+    with pytest.raises(TypeError, match="unknown runtime option"):
+        repro.runtime(nprocks=8)
+
+
+def test_from_config_matches_kwargs():
+    cfg = RuntimeConfig(nprocs=3, block_size=7, fusion=True)
+    pol = ExecutionPolicy(scheduler="blocking")
+    rt = repro.Runtime.from_config(cfg, pol)
+    assert (rt.nprocs, rt.block_size, rt.fusion, rt.mode) == (3, 7, True, "blocking")
+    assert rt.flush_backend == "sim"
+
+
+# ---------------------------------------------------------------------------
+# registries
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_registrations_present():
+    assert {"numpy", "jax", "auto"} <= set(repro.available_backends())
+    assert {"async", "blocking"} <= set(repro.available_channels())
+    assert {"latency_hiding", "blocking"} <= set(repro.available_schedulers())
+
+
+def test_duplicate_registration_refused():
+    from repro.exec import NumpyBackend
+
+    with pytest.raises(ValueError, match="already registered"):
+        repro.register_backend("numpy", lambda s, c: NumpyBackend(s, c))
+    # idempotent re-registration of the same object is fine
+    repro.register_backend("numpy", BACKENDS.get("numpy"))
+
+
+def test_early_builtin_shadowing_refused():
+    """Registering a built-in name BEFORE any lookup must fail at the
+    register() call (defaults are loaded first), not poison the registry
+    by exploding later inside the defaults import.  Needs a fresh
+    interpreter: in this process the defaults are long since loaded."""
+    import os
+    import subprocess
+    import sys
+
+    code = (
+        "import repro.api.registry as R\n"
+        "try:\n"
+        "    R.register_backend('numpy', object())\n"
+        "    raise SystemExit('early shadowing was accepted')\n"
+        "except ValueError as e:\n"
+        "    assert 'already registered' in str(e), e\n"
+        "avail = set(R.available_backends())\n"
+        "assert {'numpy', 'jax', 'auto'} <= avail, avail\n"
+        "print('ok')\n"
+    )
+    env = dict(os.environ, PYTHONPATH="src" + os.pathsep
+               + os.environ.get("PYTHONPATH", ""))
+    proc = subprocess.run(
+        [sys.executable, "-c", code],
+        capture_output=True, text=True, env=env,
+        cwd=os.path.dirname(os.path.dirname(os.path.abspath(__file__))),
+    )
+    assert proc.returncode == 0 and "ok" in proc.stdout, proc.stderr
+
+
+def test_unknown_lookup_lists_registered():
+    with pytest.raises(ValueError, match="registered:"):
+        BACKENDS.get("missing")
+
+
+def test_custom_backend_via_registry():
+    """A user-registered backend is selectable by name end-to-end."""
+    from repro.exec import NumpyBackend
+
+    class CountingBackend(NumpyBackend):
+        name = "counting"
+        executed = 0
+
+        def execute(self, op):
+            CountingBackend.executed += 1
+            super().execute(op)
+
+    repro.register_backend("counting-test", CountingBackend)
+    try:
+        policy = ExecutionPolicy(flush="async", backend="counting-test")
+        with repro.runtime(RuntimeConfig(nprocs=2, block_size=4), policy):
+            got = np.asarray(repro.ones((8, 8)) * 3.0)
+        np.testing.assert_array_equal(got, np.full((8, 8), 3.0))
+        assert CountingBackend.executed > 0
+    finally:
+        BACKENDS.unregister("counting-test")
+
+
+def test_custom_scheduler_via_registry():
+    from repro.core.scheduler import run_schedule
+
+    calls = []
+
+    def tracing(deps, cluster, executor=None):
+        calls.append(deps.n_pending)
+        return run_schedule(deps, cluster, mode="latency_hiding", executor=executor)
+
+    repro.register_scheduler("tracing-test", tracing)
+    try:
+        with repro.runtime(scheduler="tracing-test", nprocs=2, block_size=4):
+            got = np.asarray(repro.ones((6, 6)) + 2.0)
+        np.testing.assert_array_equal(got, np.full((6, 6), 3.0))
+        assert calls  # our scheduler drained the flush
+    finally:
+        SCHEDULERS.unregister("tracing-test")
+
+
+def test_custom_channel_via_registry():
+    from repro.exec.channels import BlockingChannel
+
+    made = []
+
+    def factory(*, latency=0.0, progress_threads=2):
+        ch = BlockingChannel(latency=latency)
+        made.append(ch)
+        return ch
+
+    repro.register_channel("sync-test", factory)
+    try:
+        policy = ExecutionPolicy(flush="async", channel="sync-test")
+        with repro.runtime(RuntimeConfig(nprocs=2, block_size=4), policy):
+            got = np.asarray(repro.ones((8, 8)) + 1.0)
+        np.testing.assert_array_equal(got, np.full((8, 8), 2.0))
+        assert made and made[0].n_delivered >= 0
+    finally:
+        CHANNELS.unregister("sync-test")
+
+
+# ---------------------------------------------------------------------------
+# auto backend
+# ---------------------------------------------------------------------------
+
+
+def test_auto_backend_scoring():
+    from repro.core.engine import MapPayload, TransferPayload
+    from repro.core.ufunc import exp, add
+    from repro.exec import AutoBackend
+
+    class FakeFrag:
+        size = 16384
+
+    ab = AutoBackend({}, {})
+    heavy = MapPayload(exp, 1, FakeFrag(), (), np.float64)  # 4x cost
+    light = MapPayload(add, 1, FakeFrag(), (), np.float64)
+    assert ab._score(heavy) >= ab.threshold
+    assert ab._score(light) < ab.threshold
+    assert ab._score(TransferPayload(("s", 1), 2)) == 0.0
+
+
+def test_auto_backend_end_to_end():
+    """ExecutionPolicy(backend="auto") drains correctly, mixing eager
+    NumPy (small/memory-bound payloads) with jitted JAX (heavy ones)."""
+    policy = ExecutionPolicy(flush="async", backend="auto")
+    with repro.runtime(RuntimeConfig(nprocs=2, block_size=128), policy):
+        a = repro.array(np.linspace(0.1, 1.0, 128 * 128).reshape(128, 128))
+        got = np.asarray(np.exp(a) + a * 2.0)
+    an = np.linspace(0.1, 1.0, 128 * 128).reshape(128, 128)
+    np.testing.assert_allclose(got, np.exp(an) + an * 2.0, rtol=1e-5)
+
+
+# ---------------------------------------------------------------------------
+# unified stats rendering + deprecations
+# ---------------------------------------------------------------------------
+
+
+def test_run_app_refuses_object_kwarg_mix():
+    from benchmarks.paper_apps import run_app
+
+    with pytest.raises(TypeError, match="policy="):
+        run_app("jacobi_stencil", mode="blocking",
+                policy=ExecutionPolicy(), n=16, iters=1)
+    with pytest.raises(TypeError, match="config="):
+        run_app("jacobi_stencil", nprocs=2,
+                config=RuntimeConfig(nprocs=4, block_size=8), n=16, iters=1)
+
+
+def test_format_stats_unifies_sim_and_measured():
+    with repro.runtime(nprocs=2, block_size=4) as rt:
+        np.asarray(repro.ones((8, 8)) + 1.0)
+        sim = rt.stats()
+    with repro.runtime(nprocs=2, block_size=4, flush="async") as rt:
+        np.asarray(repro.ones((8, 8)) + 1.0)
+        measured = rt.stats()
+    table = format_stats([("model", sim), ("real", measured)])
+    lines = table.splitlines()
+    assert len(lines) == 3  # header + one row per source
+    assert "makespan ms" in lines[0] and "wait%" in lines[0]
+    assert "simulated" in lines[1]
+    assert "measured" in lines[2]
+    # single-pair convenience form
+    assert "model" in format_stats(("model", sim))
+
+
+def test_legacy_reduction_shims_warn():
+    from repro.core import darray as dnp
+
+    with repro.runtime(nprocs=2, block_size=4):
+        a = repro.array(np.arange(12.0).reshape(3, 4))
+        with pytest.warns(DeprecationWarning, match="dsum is deprecated"):
+            s = dnp.dsum(a, axis=0)
+        with pytest.warns(DeprecationWarning, match="dmin is deprecated"):
+            lo = dnp.dmin(a)
+        with pytest.warns(DeprecationWarning, match="dmax is deprecated"):
+            hi = dnp.dmax(a, axis=1)
+        s, lo, hi = np.asarray(s), np.asarray(lo), np.asarray(hi)
+    np.testing.assert_allclose(s, np.arange(12.0).reshape(3, 4).sum(axis=0))
+    assert lo.item() == 0.0
+    np.testing.assert_allclose(hi, np.arange(12.0).reshape(3, 4).max(axis=1))

@@ -6,7 +6,7 @@ import pytest
 import jax
 import jax.numpy as jnp
 
-from repro.runtime import (
+from repro.resilience import (
     ClusterMonitor,
     ElasticPlan,
     StragglerTracker,
