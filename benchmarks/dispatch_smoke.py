@@ -1,0 +1,103 @@
+"""Dispatch-overhead smoke: the plan-stage acceptance gate, runnable in CI.
+
+    PYTHONPATH=src python -m benchmarks.dispatch_smoke [--ops 10000]
+
+Two checks, both against the measured (``flush_backend="async"``)
+executor:
+
+1. **Batched handoffs** — a ~``--ops``-operation elementwise chain is
+   drained with and without the ``batch`` plan pass.  The batched run
+   must use *strictly fewer* worker handoffs (queue pushes), and at
+   least ``--min-ratio``× fewer at the default size; results must be
+   bit-identical.
+2. **Coalesced messages** — the Jacobi stencil app is drained with and
+   without the ``coalesce`` pass.  The coalesced run must post *fewer*
+   channel messages; results must be bit-identical.
+
+Exits non-zero (assertion) on any regression — wired into CI as the
+``dispatch-overhead`` job.
+"""
+from __future__ import annotations
+
+import argparse
+
+import numpy as np
+
+
+def chain_handoffs(ops: int, passes, nprocs: int = 4, nblocks: int = 32):
+    """Drain an elementwise ``a += 1`` chain of ~``ops`` operations
+    (``nblocks`` blocks × ``ops // nblocks`` steps, all ready work
+    self-feeding per worker) and return (stats, result)."""
+    import repro
+
+    block = 64
+    with repro.runtime(
+        nprocs=nprocs, block_size=block, flush="async", passes=passes
+    ) as rt:
+        a = repro.ones((nblocks * block,))
+        for _ in range(max(1, ops // nblocks)):
+            a += 1.0
+        result = np.asarray(a)
+        return rt.stats(), result
+
+
+def stencil_messages(passes, n: int = 128, iters: int = 2, nprocs: int = 4):
+    from benchmarks.paper_apps import run_app
+    from repro.api import ExecutionPolicy
+
+    policy = ExecutionPolicy(flush="async", channel="async", passes=passes)
+    st, r = run_app("jacobi_stencil", nprocs=nprocs, block_size=32,
+                    policy=policy, n=n, iters=iters)
+    return st, np.asarray(r)
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--ops", type=int, default=10_000,
+                    help="approximate chain length for the handoff check")
+    ap.add_argument("--min-ratio", type=float, default=5.0,
+                    help="required handoff reduction at --ops >= 10000")
+    args = ap.parse_args()
+
+    print(f"== batched dispatch: ~{args.ops}-op elementwise chain ==")
+    st_b, r_b = chain_handoffs(args.ops, passes=("batch",))
+    st_u, r_u = chain_handoffs(args.ops, passes=())
+    assert np.array_equal(r_b, r_u), "batching changed the numerical result!"
+    ratio = st_u.n_handoffs / max(1, st_b.n_handoffs)
+    wake_b = sum(p.n_wakeups for p in st_b.procs)
+    wake_u = sum(p.n_wakeups for p in st_u.procs)
+    print(f"  handoffs: unbatched={st_u.n_handoffs} "
+          f"batched={st_b.n_handoffs} ({ratio:.1f}x fewer)")
+    print(f"  wakeups:  unbatched={wake_u} batched={wake_b}")
+    print(f"  ops/s:    unbatched={st_u.ops_per_sec:,.0f} "
+          f"batched={st_b.ops_per_sec:,.0f}")
+    assert st_b.n_handoffs < st_u.n_handoffs, (
+        f"batched handoff count ({st_b.n_handoffs}) is not strictly lower "
+        f"than unbatched ({st_u.n_handoffs})"
+    )
+    assert wake_b < wake_u, (
+        f"batched worker wakeups ({wake_b}) are not strictly fewer "
+        f"than unbatched ({wake_u})"
+    )
+    if args.ops >= 10_000:
+        assert ratio >= args.min_ratio, (
+            f"batched dispatch reduced handoffs only {ratio:.1f}x "
+            f"(required >= {args.min_ratio}x)"
+        )
+
+    print("== coalesced transfers: jacobi stencil ==")
+    st_c, r_c = stencil_messages(("coalesce", "batch"))
+    st_n, r_n = stencil_messages(())
+    assert np.array_equal(r_c, r_n), "coalescing changed the numerical result!"
+    print(f"  messages: uncoalesced={st_n.n_messages} "
+          f"coalesced={st_c.n_messages} "
+          f"({st_n.n_messages / max(1, st_c.n_messages):.1f}x fewer)")
+    assert st_c.n_messages < st_n.n_messages, (
+        f"coalesced message count ({st_c.n_messages}) is not lower than "
+        f"uncoalesced ({st_n.n_messages})"
+    )
+    print("dispatch-overhead smoke: OK")
+
+
+if __name__ == "__main__":
+    main()

@@ -272,6 +272,7 @@ def run_app(
     exec_backend=_UNSET,
     exec_channel=_UNSET,
     exec_latency=_UNSET,
+    passes=_UNSET,
     config: RuntimeConfig = None,
     policy: ExecutionPolicy = None,
     **kw,
@@ -290,7 +291,7 @@ def run_app(
                   fusion=fusion)
     pol_kw = dict(mode=mode, cluster=cluster, flush_backend=flush_backend,
                   exec_backend=exec_backend, exec_channel=exec_channel,
-                  exec_latency=exec_latency)
+                  exec_latency=exec_latency, passes=passes)
     if config is None:
         bs = cfg_kw["block_size"]
         config = RuntimeConfig(
@@ -314,6 +315,7 @@ def run_app(
             channel=None if exec_channel is _UNSET else exec_channel,
             latency=0.0 if exec_latency is _UNSET else exec_latency,
             cluster=GIGE_2012 if cluster is _UNSET else cluster,
+            passes="auto" if passes is _UNSET else passes,
         )
     else:
         clash = [k for k, v in pol_kw.items() if v is not _UNSET]

@@ -131,18 +131,23 @@ def run_roofline(results_dir="results/dryrun"):
             print(f"{r['arch']:22s} {r['shape']:12s} {r['mesh']:10s} {r['status']:>10s}  {reason}")
 
 
-def run_real_overlap(fast: bool, backend: str = "numpy"):
+def run_real_overlap(fast: bool, backend: str = "numpy", passes: str = "auto"):
     """§5 measured on the wall clock: drain the stencil schedule through
     repro.exec with the non-blocking progress-engine channel (overlap on)
     vs the synchronous channel (overlap off), injecting a scaled-up α
     (10 ms — see the regime note below) per message so there is real
     latency to hide.  The simulated rows run the cluster model at the
-    same α; ``format_stats`` renders all four with identical columns.
+    same α; ``format_stats`` renders all four with identical columns,
+    plus the dispatch-overhead counters (ops/s, handoffs/flush,
+    msgs/flush) that the plan-stage passes improve.
 
     The execution stack is swept declaratively: one measured
-    ``ExecutionPolicy`` and its ``.replace(channel=...)`` sibling, with
-    the compute ``backend`` (numpy | jax | auto) resolved through the
-    plugin registry."""
+    ``ExecutionPolicy`` and its ``.replace(channel=...)`` siblings, with
+    the compute ``backend`` (numpy | jax | auto) and the plan-stage
+    pass pipeline (``--passes``, comma-separated) resolved through the
+    plugin registries.  The sweep includes a passes-off row and a
+    record-time-fusion row, both asserted bit-identical to the planned
+    run."""
     import dataclasses
 
     import numpy as np
@@ -153,7 +158,7 @@ def run_real_overlap(fast: bool, backend: str = "numpy"):
 
     section(f"5. Real overlap — stencil app, measured wall-clock wait% "
             f"(repro.exec async executor, 10 ms α injected, "
-            f"backend={backend!r})")
+            f"backend={backend!r}, passes={passes!r})")
     # regime choice: per-message latency must dominate the ~0.1 ms/op
     # Python dispatch overhead for the overlap signal to be stable on a
     # shared machine, so α is scaled up to 10 ms (a WAN-class link) and
@@ -167,7 +172,8 @@ def run_real_overlap(fast: bool, backend: str = "numpy"):
 
     simulated = ExecutionPolicy(scheduler="latency_hiding", cluster=cl)
     measured = ExecutionPolicy(
-        flush="async", backend=backend, channel="async", latency=latency
+        flush="async", backend=backend, channel="async", latency=latency,
+        passes=passes,
     )
 
     st_sim_lh, _ = run_app("jacobi_stencil", nprocs=nprocs,
@@ -180,16 +186,35 @@ def run_real_overlap(fast: bool, backend: str = "numpy"):
                             policy=measured.replace(channel="blocking"), **kw)
     assert np.array_equal(np.asarray(r_on), np.asarray(r_off)), \
         "channel discipline changed the numerical result!"
+    # plan-stage sweep: passes off, and record-time Expr fusion on — the
+    # stencil is pure elementwise work, so every variant must be
+    # BIT-identical, not merely close
+    st_np, r_np = run_app("jacobi_stencil", nprocs=nprocs,
+                          policy=measured.replace(passes=()), **kw)
+    assert np.array_equal(np.asarray(r_on), np.asarray(r_np)), \
+        "plan passes changed the numerical result!"
+    st_fu, r_fu = run_app("jacobi_stencil", nprocs=nprocs,
+                          policy=measured, fusion=True, **kw)
+    assert np.array_equal(np.asarray(r_on), np.asarray(r_fu)), \
+        "record-time fusion changed the numerical result!"
 
     print(format_stats([
         ("overlap ON  (async)", st_on),
         ("overlap OFF (blocking)", st_off),
+        ("passes off", st_np),
+        ("LH + fusion (§7)", st_fu),
         ("latency-hiding (model)", st_sim_lh),
         ("blocking (model)", st_sim_bl),
     ]))
     print(f"\n  wall-clock win from overlap: {st_off.makespan/st_on.makespan:.2f}x "
           f"(paper fig. 18, simulated: "
           f"{st_sim_bl.makespan/st_sim_lh.makespan:.2f}x)")
+    if st_on.n_handoffs and st_np.n_handoffs:
+        print(f"  plan-stage dispatch win: handoffs {st_np.n_handoffs} -> "
+              f"{st_on.n_handoffs} "
+              f"({st_np.n_handoffs/st_on.n_handoffs:.1f}x fewer), "
+              f"messages {st_np.n_messages} -> {st_on.n_messages} "
+              f"({st_np.n_messages/max(1, st_on.n_messages):.1f}x fewer)")
     return dict(wait_on=st_on.wait_fraction, wait_off=st_off.wait_fraction)
 
 
@@ -205,6 +230,11 @@ def main() -> None:
                     help="compute backend for the real-overlap section, "
                          "resolved through the plugin registry "
                          "(numpy | jax | auto | any registered name)")
+    ap.add_argument("--passes", default="auto",
+                    help="plan-stage pass pipeline for the real-overlap "
+                         "section: 'auto', '' (none), or a comma-separated "
+                         "list of registered pass names "
+                         "(coalesce | fuse | batch | any registered name)")
     args = ap.parse_args()
     if not args.skip_apps:
         run_paper_apps(args.fast)
@@ -215,7 +245,8 @@ def main() -> None:
     if not args.skip_roofline:
         run_roofline()
     if not args.skip_real_overlap:
-        run_real_overlap(args.fast, backend=args.exec_backend)
+        run_real_overlap(args.fast, backend=args.exec_backend,
+                         passes=args.passes)
 
 
 if __name__ == "__main__":

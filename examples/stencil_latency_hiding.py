@@ -76,6 +76,12 @@ print(f"\nlatency-hiding wall-clock win: {st_bl.makespan/st_lh.makespan:.2f}x "
 # α, rendered in the same table by format_stats.  Both registered
 # compute backends drain the same graphs and must agree bit-for-bit
 # (float64 everywhere, elementwise IEEE ops).
+#
+# The async flush runs the record→plan→execute pipeline: with the
+# default passes="auto", transfers are coalesced into fewer, larger
+# messages and worker handoffs are batched — visible in the dispatch:
+# lines below (handoffs/flush, msgs/flush), and bit-identical to the
+# passes-off drain by the plan-stage ordering contract.
 MN, MITERS, MPROCS, ALPHA = 256, 4, 8, 10e-3
 mcfg = RuntimeConfig(nprocs=MPROCS, block_size=64)
 measured = ExecutionPolicy(flush="async", channel="async", latency=ALPHA)
@@ -107,6 +113,15 @@ for backend in backends:
         ("blocking (model)", st_sim_off),
     ]))
     print(f"measured overlap win: {st_off.makespan/st_on.makespan:.2f}x")
+
+# plan-stage sweep: the same drain without any graph pass must be
+# bit-identical — the passes only change WHEN data moves, never what it is
+st_plan, r_plan = run(mcfg, measured, MN, MITERS)
+st_nop, r_nop = run(mcfg, measured.replace(passes=()), MN, MITERS)
+np.testing.assert_array_equal(r_plan, r_nop)
+print(f"\nplan-stage dispatch win (passes='auto' vs none, bit-identical): "
+      f"handoffs {st_nop.n_handoffs} -> {st_plan.n_handoffs}, "
+      f"messages {st_nop.n_messages} -> {st_plan.n_messages}")
 
 # --- the same schedule as a compiled TPU/XLA program --------------------
 # (runs on CPU here; on a TPU pod the ppermute halo exchange overlaps the

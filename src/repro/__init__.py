@@ -30,6 +30,9 @@ _API_EXPORTS = (
     "register_scheduler",
     "get_scheduler",
     "available_schedulers",
+    "register_pass",
+    "get_pass",
+    "available_passes",
     "DistArray",
     "array",
     "empty",

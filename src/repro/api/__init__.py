@@ -7,9 +7,10 @@ unmodified*) and the runtime knobs around it:
   frozen dataclasses and the :func:`runtime` context-manager helper
   replace the ``Runtime(...)`` kwarg soup.
 * **Registries** — ``register_backend`` / ``register_channel`` /
-  ``register_scheduler`` plug new compute backends, transports, and
-  flush schedulers in by name (``"auto"`` backend, multi-host channels,
-  …) without touching factory code.
+  ``register_scheduler`` / ``register_pass`` plug new compute backends,
+  transports, flush schedulers, and plan-stage graph passes in by name
+  (``"auto"`` backend, multi-host channels, transfer coalescing, …)
+  without touching factory code.
 * **Arrays** — :class:`~repro.core.darray.DistArray` creation routines;
   operations on the arrays themselves go through the NumPy namespace
   (``np.add``, ``np.sum``, ``np.matmul``, …) via the array-protocol
@@ -37,12 +38,15 @@ from .config import ExecutionPolicy, RuntimeConfig, runtime
 from .registry import (
     available_backends,
     available_channels,
+    available_passes,
     available_schedulers,
     get_backend,
     get_channel,
+    get_pass,
     get_scheduler,
     register_backend,
     register_channel,
+    register_pass,
     register_scheduler,
 )
 from .reporting import format_stats
@@ -82,6 +86,9 @@ __all__ = [
     "register_scheduler",
     "get_scheduler",
     "available_schedulers",
+    "register_pass",
+    "get_pass",
+    "available_passes",
     # reporting
     "format_stats",
     # lazy core re-exports

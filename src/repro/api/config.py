@@ -84,6 +84,10 @@ class ExecutionPolicy(_Replaceable):
     latency: Union[float, str] = 0.0  # seconds per message, or "alpha"
     progress_threads: int = 2
     cluster: Optional[ClusterSpec] = None
+    # plan-stage pass pipeline: "auto" (default pipeline under the async
+    # flush, none under the simulator), a comma-separated string, or a
+    # tuple of registered pass names (repro.register_pass)
+    passes: Union[str, tuple] = "auto"
 
     def __post_init__(self):
         if self.scheduler not in registry.SCHEDULERS:
@@ -111,6 +115,29 @@ class ExecutionPolicy(_Replaceable):
             raise ValueError(
                 f"progress_threads must be >= 1, got {self.progress_threads}"
             )
+        p = self.passes
+        if isinstance(p, (list, tuple)):
+            p = tuple(p)
+            object.__setattr__(self, "passes", p)  # normalize for hashing
+        elif not isinstance(p, str):
+            raise ValueError(
+                f"passes must be 'auto', a comma-separated string or a "
+                f"tuple of pass names, got {p!r}"
+            )
+        # one parser/validator for pipeline specs: the plan module's
+        # (raises ValueError listing the registered passes on a typo)
+        from repro.core.plan import resolve_pipeline
+
+        resolve_pipeline(p, self.flush)
+
+    @property
+    def resolved_passes(self) -> tuple:
+        """The concrete pass pipeline after resolving ``"auto"`` against
+        the flush backend (the measured executor gets the default
+        coalesce/fuse/batch pipeline, the simulator none)."""
+        from repro.core.plan import resolve_pipeline
+
+        return resolve_pipeline(self.passes, self.flush)
 
     @property
     def resolved_channel(self) -> str:

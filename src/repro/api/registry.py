@@ -1,6 +1,6 @@
 """String-keyed plugin registries for the runtime's pluggable pieces.
 
-Three registries, one per extension point:
+Four registries, one per extension point:
 
 * **backends** — compute backends executing operation payloads against
   block storage (``repro.exec.backend``: ``"numpy"``, ``"jax"``,
@@ -13,6 +13,13 @@ Three registries, one per extension point:
   simulator (``repro.core.scheduler``: ``"latency_hiding"``,
   ``"blocking"``).  An entry is a callable ``fn(deps, cluster,
   executor=None) -> TimelineResult``.
+* **passes** — plan-stage graph passes run over the recorded operation
+  list before scheduling (``repro.core.plan``: ``"coalesce"``,
+  ``"batch"``; ``repro.core.fusion``: ``"fuse"``).  An entry is a
+  callable ``fn(ctx: PlanContext) -> None`` that rewrites ``ctx.ops``
+  in place and/or sets executor hints — see ``docs/architecture.md``
+  for the contract (a pass must preserve the relative program order of
+  every pair of conflicting accesses it keeps).
 
 Registration replaces the old ``make_backend`` / ``make_channel``
 if-else ladders: a new transport or an autotuned backend plugs in with
@@ -42,6 +49,9 @@ __all__ = [
     "register_scheduler",
     "get_scheduler",
     "available_schedulers",
+    "register_pass",
+    "get_pass",
+    "available_passes",
 ]
 
 
@@ -115,6 +125,7 @@ class Registry:
 BACKENDS = Registry("backend", ("repro.exec.backend",))
 CHANNELS = Registry("channel", ("repro.exec.channels",))
 SCHEDULERS = Registry("scheduler", ("repro.core.scheduler",))
+PASSES = Registry("pass", ("repro.core.plan", "repro.core.fusion"))
 
 
 def register_backend(name: str, factory: Optional[Callable] = None, **kw):
@@ -143,6 +154,22 @@ def get_channel(name: str) -> Callable:
 
 def available_channels() -> list[str]:
     return CHANNELS.available()
+
+
+def register_pass(name: str, fn: Optional[Callable] = None, **kw):
+    """Register a plan-stage graph pass: ``fn(ctx: PlanContext) ->
+    None``.  The pass may rewrite ``ctx.ops`` (setting ``ctx.dirty``)
+    and/or set executor hints in ``ctx.hints``; it must preserve the
+    relative order of every pair of conflicting accesses it keeps."""
+    return PASSES.register(name, fn, **kw)
+
+
+def get_pass(name: str) -> Callable:
+    return PASSES.get(name)
+
+
+def available_passes() -> list[str]:
+    return PASSES.available()
 
 
 def register_scheduler(name: str, fn: Optional[Callable] = None, **kw):

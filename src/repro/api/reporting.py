@@ -25,7 +25,7 @@ def _source_of(stats) -> str:
     return "measured" if isinstance(stats, WaitStats) else "simulated"
 
 
-def format_stats(rows, header: bool = True) -> str:
+def format_stats(rows, header: bool = True, dispatch: bool = True) -> str:
     """Render stats as an aligned table.
 
     ``rows`` is an iterable of ``(label, stats)`` pairs (a single pair
@@ -34,9 +34,16 @@ def format_stats(rows, header: bool = True) -> str:
     share in %, speedup vs. sequential, communicated MB, and
     compute/comm operation counts — the paper's two metrics plus the
     volume columns, identical for both sources.
+
+    With ``dispatch=True`` (default) a ``dispatch:`` line per row shows
+    the dispatch-overhead counters: drained ops per second, worker
+    handoffs per flush, and channel messages per flush — measured rows
+    only carry the last two (the simulator has no worker queues), shown
+    as ``-`` otherwise.
     """
     if isinstance(rows, tuple) and len(rows) == 2 and isinstance(rows[0], str):
         rows = [rows]
+    rows = list(rows)
     lines = [_HEADER] if header else []
     for label, st in rows:
         lines.append(
@@ -45,4 +52,17 @@ def format_stats(rows, header: bool = True) -> str:
             f"{st.comm_bytes / 1e6:8.2f} "
             f"{st.n_compute_ops:>7d}/{st.n_comm_ops:<4d}"
         )
+    if dispatch:
+        for label, st in rows:
+            # the stats objects own the arithmetic; the simulator has no
+            # worker queues or channel, so those columns render as "-"
+            ops_s = f"{st.ops_per_sec:,.0f}" if st.makespan > 0 else "-"
+            nh = getattr(st, "handoffs_per_flush", None)
+            nm = getattr(st, "messages_per_flush", None)
+            hand = "-" if nh is None else f"{nh:,.0f}"
+            msgs = "-" if nm is None else f"{nm:,.0f}"
+            lines.append(
+                f"dispatch: {label:<26s} ops/s={ops_s:>12s} "
+                f"handoffs/flush={hand:>8s} msgs/flush={msgs:>8s}"
+            )
     return "\n".join(lines)

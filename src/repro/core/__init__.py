@@ -7,6 +7,10 @@ Public surface:
   dist=True)``, views, ufuncs, reductions, matmul).
 * :class:`DependencySystem` — the paper's per-base-block dependency-list
   heuristic (§5.7.2); :class:`FullDAG` — the O(n²) baseline it replaces.
+* :mod:`repro.core.plan` — the plan stage of the record → plan →
+  execute flush pipeline: registered graph passes (transfer coalescing,
+  cross-kind fusion, batched dispatch) rewrite the recorded graph
+  before scheduling.
 * :func:`run_schedule` — the flush algorithm (§5.7), latency-hiding and
   blocking modes; timeline accounting on an α–β cluster model.
 """
@@ -14,6 +18,7 @@ from .blocks import Fragment, Layout, OperandSpec, ViewSpec, fragment_iteration_
 from .darray import DistArray
 from .engine import ArrayBase, Runtime, current_runtime
 from .graph import COMM, COMPUTE, AccessNode, DependencySystem, FullDAG, OperationNode
+from .plan import DEFAULT_ASYNC_PIPELINE, PlanStats, plan, resolve_pipeline
 from .scheduler import DeadlockError, run_rendezvous_bsp, run_schedule
 from .timeline import GIGE_2012, TPU_V5E_ICI, ClusterSpec, TimelineResult
 
@@ -33,6 +38,10 @@ __all__ = [
     "AccessNode",
     "COMM",
     "COMPUTE",
+    "plan",
+    "PlanStats",
+    "resolve_pipeline",
+    "DEFAULT_ASYNC_PIPELINE",
     "run_schedule",
     "run_rendezvous_bsp",
     "DeadlockError",

@@ -22,7 +22,6 @@ implemented here as a beyond-paper optimization.
 """
 from __future__ import annotations
 
-import warnings
 from typing import Optional, Sequence, Union
 
 import numpy as np
@@ -682,31 +681,6 @@ def _np_matmul(a, b, **kw):
     return matmul(a, b)
 
 
-# ---------------------------------------------------------------------------
-# deprecated repro-specific aliases (pre-protocol API); the canonical
-# spellings are np.sum / np.min / np.max on the DistArray itself
-# ---------------------------------------------------------------------------
-
-def _deprecated_reduction(old: str, name: str, new: str):
-    def shim(a, axis=None, keepdims=False):
-        warnings.warn(
-            f"repro.core.darray.{old} is deprecated; use {new} instead",
-            DeprecationWarning,
-            stacklevel=2,
-        )
-        return _as_lazy(a)._reduce(name, axis, keepdims)
-
-    shim.__name__ = old
-    shim.__qualname__ = old
-    shim.__doc__ = f"Deprecated alias of ``{new}``."
-    return shim
-
-
-dsum = _deprecated_reduction("dsum", "add", "np.sum(a) or a.sum()")
-dmin = _deprecated_reduction("dmin", "minimum", "np.min(a) or a.min()")
-dmax = _deprecated_reduction("dmax", "maximum", "np.max(a) or a.max()")
-
-
 __all__ = [
     "DistArray",
     "array",
@@ -718,8 +692,5 @@ __all__ = [
     "random",
     "matmul",
     "roll",
-    "dsum",
-    "dmin",
-    "dmax",
     *_GENERATED_UFUNCS,
 ]

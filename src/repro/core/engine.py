@@ -117,6 +117,33 @@ class FillPayload:
     value: object
 
 
+# -- plan-stage payloads (produced by repro.core.plan / repro.core.fusion
+# graph passes, never recorded directly) ------------------------------------
+
+
+@dataclass
+class CoalescedTransferPayload:
+    """Several same-(src, dst) transfers merged into ONE wire message by
+    the ``coalesce`` plan pass: the channel posts a single send whose
+    delivery fills every constituent scratch buffer."""
+
+    transfers: tuple  # tuple[TransferPayload, ...]
+
+
+@dataclass
+class FusedMapReducePayload:
+    """A map whose only consumer was a partial reduction of the same
+    fragment (and whose output base is dead), fused by the ``fuse`` plan
+    pass: the elementwise result goes straight into the reduction's
+    scratch buffer without a block-storage round trip."""
+
+    map: MapPayload
+    ufunc_name: str
+    axes: tuple[int, ...]
+    dst_scratch: int
+    keepdims: bool = False
+
+
 # ---------------------------------------------------------------------------
 # Payload interpretation — shared by the simulated executor (run_schedule's
 # ``executor`` callback) and the asynchronous executor in repro.exec.  It is
@@ -180,6 +207,24 @@ def execute_payload(p, storage: dict, scratch: dict) -> None:
     elif isinstance(p, FillPayload):
         blk = storage[(p.out_base, p.out_frag.block)]
         blk[p.out_frag.slices] = p.value
+    elif isinstance(p, CoalescedTransferPayload):
+        for t in p.transfers:
+            scratch[t.dst_scratch] = np.array(
+                resolve_ref(t.src, storage, scratch), copy=True
+            )
+    elif isinstance(p, FusedMapReducePayload):
+        m = p.map
+        args = [resolve_ref(r, storage, scratch) for r in m.args]
+        res = np.asarray(m.ufunc(*args))
+        # reproduce the store semantics the unfused pair had: the map
+        # result was broadcast into (and cast to) the output fragment,
+        # then the reduction read exactly that fragment
+        res = np.broadcast_to(res, m.out_frag.shape).astype(
+            m.out_dtype, copy=False
+        )
+        scratch[p.dst_scratch] = reduce_fn(p.ufunc_name)(
+            res, axis=p.axes if p.axes else None, keepdims=p.keepdims
+        )
     else:  # pragma: no cover
         raise TypeError(f"unknown payload {type(p)}")
 
@@ -217,6 +262,7 @@ class Runtime:
         exec_channel: Optional[str] = None,
         exec_latency: Union[float, str] = 0.0,  # seconds, or "alpha"
         exec_progress_threads: int = 2,
+        passes: Union[str, Sequence[str]] = "auto",
     ):
         self.nprocs = nprocs
         self.block_size = block_size
@@ -265,6 +311,15 @@ class Runtime:
         self.exec_latency = exec_latency
         self.exec_progress_threads = exec_progress_threads
         self.exec_stats = None  # WaitStats accumulated across async flushes
+        # plan-stage pass pipeline (record -> PLAN -> execute); "auto"
+        # resolves per flush backend: the measured executor gets the
+        # default optimization pipeline, the simulator stays the paper's
+        # unrewritten graphs.  Resolution validates every name against
+        # the pass registry, so typos fail here, not at the first flush.
+        from .plan import PlanStats, resolve_pipeline
+
+        self.passes = resolve_pipeline(passes, flush_backend)
+        self.plan_stats = PlanStats()
         # compute backend + channel persist across flushes (jit caches and
         # progress threads are expensive to rebuild); created lazily
         self._exec_backend_obj = None
@@ -307,6 +362,7 @@ class Runtime:
             exec_channel=policy.resolved_channel,
             exec_latency=policy.latency,
             exec_progress_threads=policy.progress_threads,
+            passes=policy.passes,
         )
 
     # -- context management -------------------------------------------------
@@ -642,16 +698,35 @@ class Runtime:
     def _execute(self, op: OperationNode) -> None:
         execute_payload(op.payload, self.storage, self.scratch)
 
-    # -- flush (§5.6/§5.7) ----------------------------------------------------
+    # -- flush (§5.6 record -> plan -> §5.7 execute) --------------------------
     def flush(self):
         """Drain the recorded dependency system.  Returns the per-flush
         stats object: a :class:`TimelineResult` under the simulated
-        backend, a :class:`repro.exec.WaitStats` under the async one."""
+        backend, a :class:`repro.exec.WaitStats` under the async one.
+
+        The flush is a three-stage pipeline: the *recorded* graph first
+        goes through the *plan* stage (:func:`repro.core.plan.plan` runs
+        the configured pass pipeline — transfer coalescing, cross-kind
+        fusion, batch-dispatch hints), then the planned graph is
+        *executed* by the scheduler or the async executor."""
         if self.deps.n_pending == 0:
             self._purge_dead()
             return None
+        hints = {}
+        if self.passes:
+            from .plan import plan as run_plan
+
+            planned = run_plan(
+                self.deps,
+                self.passes,
+                dead_bases=set(self._dead_bases),
+                storage=self.storage,
+            )
+            self.deps = planned.deps
+            hints = planned.hints
+            self.plan_stats.merge(planned.stats)
         if self.flush_backend == "async":
-            res = self._flush_async()
+            res = self._flush_async(hints)
         else:
             from repro.api.registry import get_scheduler
 
@@ -669,10 +744,11 @@ class Runtime:
         self._purge_dead()
         return res
 
-    def _flush_async(self):
+    def _flush_async(self, hints=None):
         """Drain through the real multi-worker executor (repro.exec)."""
         from repro.exec import AsyncExecutor, make_backend, make_channel
 
+        hints = hints or {}
         if self._exec_backend_obj is None:
             self._exec_backend_obj = make_backend(
                 self.exec_backend, self.storage, self.scratch
@@ -688,6 +764,7 @@ class Runtime:
             scratch=self.scratch,
             backend=self._exec_backend_obj,
             channel=self._exec_channel_obj,
+            batch_dispatch=bool(hints.get("batch_dispatch")),
         )
         try:
             res = executor.run(self.deps)

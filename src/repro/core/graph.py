@@ -23,7 +23,13 @@ from typing import Callable, Hashable, Iterable, Optional
 
 from .blocks import Region
 
-__all__ = ["AccessNode", "OperationNode", "DependencySystem", "FullDAG"]
+__all__ = [
+    "AccessNode",
+    "OperationNode",
+    "DependencySystem",
+    "FullDAG",
+    "regions_overlap",
+]
 
 _op_counter = itertools.count()
 
@@ -31,6 +37,18 @@ _op_counter = itertools.count()
 # invariant 2/3); COMPUTE nodes are everything else.
 COMM = "comm"
 COMPUTE = "compute"
+
+
+def regions_overlap(a: Optional[Region], b: Optional[Region]) -> bool:
+    """Per-dimension interval intersection — THE conflict geometry, shared
+    by :meth:`AccessNode.conflicts` and the plan-stage passes.  ``None``
+    means the whole block (always overlaps)."""
+    if a is None or b is None:
+        return True
+    for (a0, a1), (b0, b1) in zip(a, b):
+        if a1 <= b0 or b1 <= a0:
+            return False
+    return True
 
 
 @dataclass
@@ -49,12 +67,7 @@ class AccessNode:
     def conflicts(self, other: "AccessNode") -> bool:
         if not (self.write or other.write):
             return False
-        if self.region is None or other.region is None:
-            return True
-        for (a0, a1), (b0, b1) in zip(self.region, other.region):
-            if a1 <= b0 or b1 <= a0:
-                return False
-        return True
+        return regions_overlap(self.region, other.region)
 
 
 @dataclass
@@ -79,10 +92,24 @@ class OperationNode:
     accesses: list[AccessNode] = field(default_factory=list, repr=False)
     refcount: int = 0
     executed: bool = False
+    # insertion sequence within the owning dependency system — the
+    # program-order key (uid is creation order, which diverges for
+    # plan-stage merged nodes inserted mid-list on rebuild)
+    seq: int = 0
 
     def add_access(self, acc: AccessNode) -> None:
         acc.op = self
         self.accesses.append(acc)
+
+
+def _reset_for_reinsert(op: OperationNode) -> None:
+    """Clear the link state a previous insertion left on ``op`` so it can
+    be re-inserted into a fresh graph (plan-stage rebuild)."""
+    op.refcount = 0
+    op.executed = False
+    for acc in op.accesses:
+        acc.dependents = []
+        acc.removed = False
 
 
 class DependencySystem:
@@ -108,9 +135,25 @@ class DependencySystem:
             self.ready.append(op)
 
     # -- recording -------------------------------------------------------
+    @classmethod
+    def rebuild(cls, ops: Iterable[OperationNode]) -> "DependencySystem":
+        """Fresh dependency system from operation-nodes in the given
+        (program) order — the re-insertion step of the plan stage
+        (``repro.core.plan``).  Access-node link state from a previous
+        insertion is reset; because insertion order encodes the total
+        order of conflicting accesses, a pass that preserves the
+        relative order of the ops it keeps yields an equivalent
+        schedule constraint set."""
+        deps = cls()
+        for op in ops:
+            _reset_for_reinsert(op)
+            deps.insert(op)
+        return deps
+
     def insert(self, op: OperationNode) -> None:
         """Record ``op``: insert each access into its block's dependency
         list, accumulating the refcount from conflicting earlier accesses."""
+        op.seq = self.n_ops  # program order within THIS system
         refs = 0
         for acc in op.accesses:
             lst = self._lists.setdefault(acc.key, [])
@@ -164,14 +207,17 @@ class DependencySystem:
         return [op for op in self.ready if op.kind == kind]
 
     def pending_ops(self) -> list[OperationNode]:
-        """All recorded-but-unexecuted operations, in uid order — the
-        diagnostic payload for deadlock reports."""
+        """All recorded-but-unexecuted operations, in *program* (insertion)
+        order — the plan stage's input and the diagnostic payload for
+        deadlock reports.  Keyed on ``seq``, not ``uid``: a plan-stage
+        merged node sits mid-list with a larger uid, and re-planning a
+        partially drained graph must not reorder it past its consumers."""
         seen: dict[int, OperationNode] = {}
         for lst in self._lists.values():
             for acc in lst:
                 if not acc.removed and acc.op is not None and not acc.op.executed:
-                    seen[acc.op.uid] = acc.op
-        return [seen[uid] for uid in sorted(seen)]
+                    seen[acc.op.seq] = acc.op
+        return [seen[s] for s in sorted(seen)]
 
     @property
     def done(self) -> bool:
@@ -188,7 +234,18 @@ class FullDAG:
         self.n_pending = 0
         self.scan_steps = 0
 
+    @classmethod
+    def rebuild(cls, ops: Iterable[OperationNode]) -> "FullDAG":
+        """Same contract as :meth:`DependencySystem.rebuild` for the
+        O(n²) baseline graph."""
+        dag = cls()
+        for op in ops:
+            _reset_for_reinsert(op)
+            dag.insert(op)
+        return dag
+
     def insert(self, op: OperationNode) -> None:
+        op.seq = len(self.nodes)
         refs = 0
         for prev in self.nodes:
             if prev.executed:

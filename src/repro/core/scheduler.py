@@ -52,6 +52,17 @@ def format_stuck_ops(ops: list[OperationNode], limit: int = 20) -> str:
     return "\n".join(lines)
 
 
+def _drain_ready(deps: DependencySystem, schedule, t: float) -> None:
+    """Comm-first drain of the ready queue (invariants 2 & 3): every
+    ready communication is initiated before any ready computation."""
+    for kind in (COMM, COMPUTE):
+        while True:
+            op = deps.pop_ready(kind)
+            if op is None:
+                break
+            schedule(op, t)
+
+
 def run_schedule(
     deps: DependencySystem,
     cluster: ClusterSpec,
@@ -66,6 +77,11 @@ def run_schedule(
     computation for the CPU in latency-hiding mode (initiation is
     non-blocking), so every ready transfer is in flight before any ready
     compute is allowed to make the process busy.
+
+    ``deps`` may be the recorded system or a plan-stage rewrite of it
+    (:mod:`repro.core.plan`): coalesced transfer nodes carry their summed
+    byte count, so one merged message pays a single α under the cluster
+    model, and fused compute nodes carry their summed cost.
     """
     if mode not in ("latency_hiding", "blocking"):
         raise ValueError(f"unknown mode {mode!r}")
@@ -116,25 +132,14 @@ def run_schedule(
         heapq.heappush(events, (end, next(seq), op))
 
     # comm-first initial drain of the ready queue (invariant 2)
-    for kind in (COMM, COMPUTE):
-        while True:
-            op = deps.pop_ready(kind)
-            if op is None:
-                break
-            schedule(op, 0.0)
+    _drain_ready(deps, schedule, 0.0)
 
     while events:
         t, _, op = heapq.heappop(events)
         res.makespan = max(res.makespan, t)
         for newly in deps.complete(op):
             pass  # ready queue already holds them
-        # drain: comm before compute (paper invariants 2 & 3)
-        for kind in (COMM, COMPUTE):
-            while True:
-                nxt = deps.pop_ready(kind)
-                if nxt is None:
-                    break
-                schedule(nxt, t)
+        _drain_ready(deps, schedule, t)
 
     if not deps.done:
         stuck = deps.pending_ops() if hasattr(deps, "pending_ops") else []

@@ -133,6 +133,14 @@ class TimelineResult:
         return self.seq_time / self.makespan if self.makespan > 0 else 0.0
 
     @property
+    def ops_per_sec(self) -> float:
+        """Modeled dispatch throughput: operations scheduled per
+        simulated second (the measured counterpart lives on
+        ``WaitStats``)."""
+        total = self.n_compute_ops + self.n_comm_ops
+        return total / self.makespan if self.makespan > 0 else 0.0
+
+    @property
     def cpu_utilization(self) -> float:
         return 1.0 - self.wait_fraction
 

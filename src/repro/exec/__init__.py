@@ -6,7 +6,8 @@ simulator; this subsystem executes the *same* recorded dependency graphs
 with genuine concurrency so the waiting-time metric is measured:
 
 * :class:`AsyncExecutor` — per-process worker threads with comm-first
-  ready queues, futures-based completion, structural deadlock detection.
+  ready queues, sweep-based completion (batched per-worker handoffs
+  under the ``"batch"`` plan pass), structural deadlock detection.
 * :mod:`~repro.exec.channels` — non-blocking transfer channel with a
   progress engine (scratch buffers delivered while compute runs) vs. the
   synchronous blocking channel baseline.

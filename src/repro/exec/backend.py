@@ -10,11 +10,13 @@ the wall-clock counterpart of ``repro.core.scheduler.run_schedule``:
   non-blocking :class:`AsyncChannel` progress engine delivers scratch
   buffers while compute runs, the :class:`BlockingChannel` reproduces the
   synchronous baseline on the worker's own clock;
-* completion is futures-based: every finished operation resolves a
-  :class:`~repro.exec.futures.Future` whose done-callback performs the
-  refcount decrements (``deps.complete``) and dispatches newly-ready
-  operations — the graph's ``on_ready`` hook delivers them straight to
-  worker queues, no central scheduler loop;
+* completion is sweep-based: a finished worker batch (or a channel
+  future's done-callback) performs the refcount decrements
+  (``deps.complete``) and dispatches newly-ready operations — the
+  graph's ``on_ready`` hook delivers them straight to worker queues,
+  no central scheduler loop.  Under the ``"batch"`` plan pass the
+  sweep moves per-worker *lists* per lock round trip
+  (``batch_dispatch=True``), amortizing the Python handoff overhead;
 * the numerical result is bit-identical to the simulated executor's: the
   dependency system totally orders every pair of conflicting accesses, so
   any schedule that respects it interprets the payloads (shared
@@ -394,7 +396,14 @@ def make_backend(name, storage: dict, scratch: dict) -> ComputeBackend:
 
 
 class AsyncExecutor:
-    """Drains a DependencySystem on worker threads + transfer channels."""
+    """Drains a DependencySystem on worker threads + transfer channels.
+
+    With ``batch_dispatch=True`` (set by the ``"batch"`` plan pass) the
+    completion sweep groups newly-ready compute ops per worker and
+    pushes each group with one lock+notify, workers drain their whole
+    queue per wakeup, and a finished batch is completed through a
+    single dependency-system sweep — the handoff count drops from one
+    per operation to one per batch (``WaitStats.n_handoffs``)."""
 
     def __init__(
         self,
@@ -405,6 +414,7 @@ class AsyncExecutor:
         channel: str = "async",
         latency: float = 0.0,
         progress_threads: int = 2,
+        batch_dispatch: bool = False,
     ):
         self.nworkers = nworkers
         self.backend = make_backend(backend, storage, scratch)
@@ -415,8 +425,10 @@ class AsyncExecutor:
             channel, latency=latency, progress_threads=progress_threads
         )
         self.mode = "blocking-channel" if self.channel.blocking else "async"
+        self.batch_dispatch = batch_dispatch
         self.workers = [
-            Worker(r, self._run_op, self._record_error) for r in range(nworkers)
+            Worker(r, self._run_batch, self._record_error, batch=batch_dispatch)
+            for r in range(nworkers)
         ]
         self._glock = threading.Lock()  # guards deps + inflight accounting
         self._deps: Optional[DependencySystem] = None
@@ -428,6 +440,7 @@ class AsyncExecutor:
         self.comm_bytes = 0
         self.n_comm_ops = 0
         self.n_compute_ops = 0
+        self.n_handoffs = 0
 
     # -- error path ------------------------------------------------------
     def _record_error(self, exc: BaseException) -> None:
@@ -448,59 +461,113 @@ class AsyncExecutor:
         else:
             self.n_compute_ops += 1
 
-    def _dispatch(self, op: OperationNode) -> None:
-        """Route a ready op.  COMM on the async channel is initiated
-        immediately from the discovering thread (aggressive initiation —
-        invariant 2 holds even while the owner worker is mid-compute);
-        everything else goes to its owner's comm-first ready queue."""
-        if op.kind == COMM and not self.channel.blocking:
-            fut = self.channel.post(op, self._exec_comm)
-            fut.add_done_callback(lambda f, op=op: self._op_done(op, f.exception()))
+    def _dispatch_batch(self, ops: list[OperationNode]) -> None:
+        """Route a sweep of ready ops.  COMM on the async channel is
+        initiated immediately from the discovering thread in one batched
+        post (aggressive initiation — invariant 2 holds even while the
+        owner workers are mid-compute); everything else is grouped per
+        owner and handed to the comm-first ready queues — one push per
+        worker under batched dispatch, one per op otherwise."""
+        if not ops:
             return
-        # compute — and, under the blocking discipline, transfers too: the
-        # source process performs them synchronously on its own thread
-        self.workers[op.procs[0] % self.nworkers].push(op)
+        async_comm: list[OperationNode] = []
+        per_worker: dict[int, list[OperationNode]] = {}
+        for op in ops:
+            if op.kind == COMM and not self.channel.blocking:
+                async_comm.append(op)
+            else:
+                per_worker.setdefault(op.procs[0] % self.nworkers, []).append(op)
+        if async_comm:
+            post_many = getattr(self.channel, "post_many", None)
+            items = [(op, self._exec_comm) for op in async_comm]
+            if post_many is not None:
+                futs = post_many(items)
+            else:  # channel plugin without batched posting
+                futs = [self.channel.post(op, ex) for op, ex in items]
+            for op, fut in zip(async_comm, futs):
+                fut.add_done_callback(self._comm_callback(op))
+        handoffs = 0
+        for rank, group in per_worker.items():
+            if self.batch_dispatch:
+                self.workers[rank].push_batch(group)
+                handoffs += 1
+            else:
+                for op in group:
+                    self.workers[rank].push(op)
+                    handoffs += 1
+        if handoffs:
+            with self._glock:
+                self.n_handoffs += handoffs
 
-    def _run_op(self, op: OperationNode, worker: Worker) -> None:
-        if op.kind == COMM:  # blocking channel only: inline transfer
-            t0 = time.perf_counter()  # wall: the blocking IS the waiting
-            fut = self.channel.post(op, self._exec_comm)
-            worker.stats.comm_busy += time.perf_counter() - t0
-            worker.stats.n_comm += 1
-            fut.add_done_callback(lambda f, op=op: self._op_done(op, f.exception()))
-            return
-        # compute is accounted in per-thread CPU time: wall durations on an
-        # oversubscribed machine include GIL/scheduler preemption, which
-        # would inflate "busy" exactly when contention is worst
-        t0 = time.thread_time()
-        try:
-            self.backend.execute(op)
-        except BaseException as exc:
-            self._op_done(op, exc)
-            return
-        worker.stats.compute_busy += time.thread_time() - t0
-        worker.stats.n_compute += 1
-        self._op_done(op, None)
+    def _comm_callback(self, op: OperationNode):
+        def cb(fut) -> None:
+            exc = fut.exception()
+            if exc is not None:
+                self._record_error(exc)
+            else:
+                self._ops_done((op,))
 
-    # -- completion (futures callbacks land here) --------------------------
-    def _op_done(self, op: OperationNode, exc: Optional[BaseException]) -> None:
-        # this runs as a future done-callback on worker/progress threads: it
-        # must never raise, or the completing thread dies and the drain hangs
+        return cb
+
+    def _run_batch(self, ops: list[OperationNode], worker: Worker) -> None:
+        """Execute one worker batch (comm-first order already applied by
+        the pop) and complete it through a single dependency sweep."""
+        completed: list[OperationNode] = []
+        for op in ops:
+            if op.kind == COMM:  # blocking channel only: inline transfer
+                t0 = time.perf_counter()  # wall: the blocking IS the waiting
+                fut = self.channel.post(op, self._exec_comm)
+                try:
+                    # wait for resolution: the built-in BlockingChannel
+                    # resolves before post() returns, but a registered
+                    # blocking transport may resolve from a delivery
+                    # thread — the op must not complete before its data
+                    fut.result()
+                except BaseException as exc:
+                    worker.stats.comm_busy += time.perf_counter() - t0
+                    worker.stats.n_comm += 1
+                    if completed:
+                        self._ops_done(completed)
+                    self._record_error(exc)
+                    return
+                worker.stats.comm_busy += time.perf_counter() - t0
+                worker.stats.n_comm += 1
+                completed.append(op)
+                continue
+            # compute is accounted in per-thread CPU time: wall durations on
+            # an oversubscribed machine include GIL/scheduler preemption,
+            # which would inflate "busy" exactly when contention is worst
+            t0 = time.thread_time()
+            try:
+                self.backend.execute(op)
+            except BaseException as exc:
+                if completed:
+                    self._ops_done(completed)
+                self._record_error(exc)
+                return
+            worker.stats.compute_busy += time.thread_time() - t0
+            worker.stats.n_compute += 1
+            completed.append(op)
+        self._ops_done(completed)
+
+    # -- completion (worker batches and channel callbacks land here) -------
+    def _ops_done(self, ops) -> None:
+        # this runs on worker/progress threads (including as a future
+        # done-callback): it must never raise, or the completing thread
+        # dies and the drain hangs
         try:
-            self._op_done_inner(op, exc)
+            self._ops_done_inner(ops)
         except BaseException as internal:  # pragma: no cover - defensive
             self._record_error(internal)
 
-    def _op_done_inner(self, op: OperationNode, exc: Optional[BaseException]) -> None:
-        if exc is not None:
-            self._record_error(exc)
-            return
+    def _ops_done_inner(self, ops) -> None:
         deadlocked = False
         with self._glock:
             if self._deps is None:  # already torn down
                 return
-            self._inflight -= 1
-            self._deps.complete(op)  # on_ready collects into _ready_batch
+            self._inflight -= len(ops)
+            for op in ops:
+                self._deps.complete(op)  # on_ready collects into _ready_batch
             newly, self._ready_batch = self._ready_batch, []
             self._inflight += len(newly)
             for nxt in newly:
@@ -510,8 +577,7 @@ class AsyncExecutor:
                     self._finished.set()
                 else:
                     deadlocked = True
-        for nxt in newly:
-            self._dispatch(nxt)
+        self._dispatch_batch(newly)
         if deadlocked:
             self._record_error(self._deadlock_error())
             self._finished.set()
@@ -532,8 +598,9 @@ class AsyncExecutor:
         self._started = True
         self._deps = deps
         prev_hook = deps.on_ready
-        # late-bound: _op_done swaps _ready_batch for a fresh list per batch
+        # late-bound: _ops_done swaps _ready_batch for a fresh list per sweep
         deps.on_ready = lambda op: self._ready_batch.append(op)
+        posted_before = getattr(self.channel, "n_posted", 0)
         for w in self.workers:
             w.start()
         t0 = time.perf_counter()
@@ -550,8 +617,7 @@ class AsyncExecutor:
                 self._inflight += len(initial)
                 if not initial and not deps.done:
                     raise self._deadlock_error()
-            for op in initial:
-                self._dispatch(op)
+            self._dispatch_batch(initial)
             if deps.n_pending > 0 or self._inflight > 0:
                 self._finished.wait()
             if self._error is not None:
@@ -575,6 +641,8 @@ class AsyncExecutor:
             n_compute_ops=self.n_compute_ops,
             seq_time=sum(w.stats.compute_busy for w in self.workers),
             n_flushes=1,
+            n_handoffs=self.n_handoffs,
+            n_messages=getattr(self.channel, "n_posted", 0) - posted_before,
         )
         return stats
 

@@ -85,6 +85,23 @@ class AsyncChannel:
             self._cv.notify()
         return fut
 
+    def post_many(self, items) -> list[Future]:
+        """Initiate a batch of transfers — ``items`` is a sequence of
+        ``(op, execute)`` pairs — with a single lock acquisition and
+        one progress-engine wakeup, the channel-side analogue of the
+        batched worker handoff."""
+        futs = []
+        due = time.monotonic() + self.latency
+        with self._cv:
+            for op, execute in items:
+                fut = Future()
+                self.n_posted += 1
+                heapq.heappush(self._heap, (due, self._seq, op, execute, fut))
+                self._seq += 1
+                futs.append(fut)
+            self._cv.notify_all()
+        return futs
+
     def _progress_loop(self) -> None:
         while True:
             with self._cv:
@@ -143,6 +160,10 @@ class BlockingChannel:
             self.n_delivered += 1
         fut.set_result(op)
         return fut
+
+    def post_many(self, items) -> list[Future]:
+        """Synchronous batch post: transfers execute inline, in order."""
+        return [self.post(op, execute) for op, execute in items]
 
     def close(self) -> None:
         pass

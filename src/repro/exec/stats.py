@@ -29,6 +29,7 @@ class WorkerStats:
     idle: float = 0.0  # ready queue empty, waiting on dependencies
     n_compute: int = 0
     n_comm: int = 0
+    n_wakeups: int = 0  # queue pops (one per batch under batched dispatch)
 
     def absorb(self, other: "WorkerStats") -> None:
         self.compute_busy += other.compute_busy
@@ -36,6 +37,7 @@ class WorkerStats:
         self.idle += other.idle
         self.n_compute += other.n_compute
         self.n_comm += other.n_comm
+        self.n_wakeups += other.n_wakeups
 
 
 @dataclass
@@ -51,6 +53,9 @@ class WaitStats:
     n_compute_ops: int = 0
     seq_time: float = 0.0  # Σ measured compute durations = 1-worker time
     n_flushes: int = 0
+    # dispatch-overhead counters (plan-stage batching/coalescing wins)
+    n_handoffs: int = 0  # producer→worker queue pushes (wakeup requests)
+    n_messages: int = 0  # messages posted on the transfer channel
 
     def __post_init__(self):
         if not self.procs:
@@ -102,9 +107,30 @@ class WaitStats:
         self.n_compute_ops += other.n_compute_ops
         self.seq_time += other.seq_time
         self.n_flushes += max(1, other.n_flushes)
+        self.n_handoffs += other.n_handoffs
+        self.n_messages += other.n_messages
         for mine, theirs in zip(self.procs, other.procs):
             mine.absorb(theirs)
         return self
+
+    @property
+    def ops_per_sec(self) -> float:
+        """Measured dispatch throughput: operations drained per
+        wall-clock second."""
+        total = self.n_compute_ops + self.n_comm_ops
+        return total / self.elapsed if self.elapsed > 0 else 0.0
+
+    @property
+    def handoffs_per_flush(self) -> float:
+        """Worker-queue pushes per flush — the lock+event round trips
+        that batched dispatch amortizes."""
+        return self.n_handoffs / max(1, self.n_flushes)
+
+    @property
+    def messages_per_flush(self) -> float:
+        """Messages posted on the transfer channel per flush — what
+        transfer coalescing reduces."""
+        return self.n_messages / max(1, self.n_flushes)
 
     def summary(self) -> str:
         return (
@@ -112,15 +138,17 @@ class WaitStats:
             f"wait={self.wait_fraction * 100:5.1f}% "
             f"speedup={self.speedup:6.2f} "
             f"comm={self.comm_bytes / 1e6:8.2f} MB "
-            f"ops={self.n_compute_ops}c/{self.n_comm_ops}m"
+            f"ops={self.n_compute_ops}c/{self.n_comm_ops}m "
+            f"handoffs={self.n_handoffs} msgs={self.n_messages}"
         )
 
     def per_worker_table(self) -> str:
         lines = [f"{'worker':>6s} {'compute ms':>11s} {'comm-wait ms':>13s} "
-                 f"{'idle ms':>9s} {'ops':>9s}"]
+                 f"{'idle ms':>9s} {'ops':>9s} {'wakeups':>8s}"]
         for i, p in enumerate(self.procs):
             lines.append(
                 f"{i:6d} {p.compute_busy * 1e3:11.3f} {p.comm_busy * 1e3:13.3f} "
-                f"{p.idle * 1e3:9.3f} {p.n_compute:4d}c/{p.n_comm:3d}m"
+                f"{p.idle * 1e3:9.3f} {p.n_compute:4d}c/{p.n_comm:3d}m "
+                f"{p.n_wakeups:8d}"
             )
         return "\n".join(lines)

@@ -250,26 +250,27 @@ def test_format_stats_unifies_sim_and_measured():
         measured = rt.stats()
     table = format_stats([("model", sim), ("real", measured)])
     lines = table.splitlines()
-    assert len(lines) == 3  # header + one row per source
+    # header + one row per source + one dispatch line per source
+    assert len(lines) == 5
     assert "makespan ms" in lines[0] and "wait%" in lines[0]
     assert "simulated" in lines[1]
     assert "measured" in lines[2]
+    # dispatch-overhead counters: ops/s for both, handoffs/messages only
+    # for the measured source (the simulator has no worker queues)
+    assert lines[3].startswith("dispatch:") and "ops/s=" in lines[3]
+    assert "handoffs/flush=       -" in lines[3]
+    assert "handoffs/flush=" in lines[4] and "-" not in lines[4].split("handoffs/flush=")[1].split()[0]
+    # the table-only form is still available
+    assert len(format_stats([("model", sim)], dispatch=False).splitlines()) == 2
     # single-pair convenience form
     assert "model" in format_stats(("model", sim))
 
 
-def test_legacy_reduction_shims_warn():
+def test_legacy_reduction_shims_removed():
+    """The pre-protocol dsum/dmin/dmax aliases are gone (deprecated for
+    two PRs); np.sum / a.sum() is the only spelling."""
     from repro.core import darray as dnp
 
-    with repro.runtime(nprocs=2, block_size=4):
-        a = repro.array(np.arange(12.0).reshape(3, 4))
-        with pytest.warns(DeprecationWarning, match="dsum is deprecated"):
-            s = dnp.dsum(a, axis=0)
-        with pytest.warns(DeprecationWarning, match="dmin is deprecated"):
-            lo = dnp.dmin(a)
-        with pytest.warns(DeprecationWarning, match="dmax is deprecated"):
-            hi = dnp.dmax(a, axis=1)
-        s, lo, hi = np.asarray(s), np.asarray(lo), np.asarray(hi)
-    np.testing.assert_allclose(s, np.arange(12.0).reshape(3, 4).sum(axis=0))
-    assert lo.item() == 0.0
-    np.testing.assert_allclose(hi, np.arange(12.0).reshape(3, 4).max(axis=1))
+    for name in ("dsum", "dmin", "dmax"):
+        assert not hasattr(dnp, name)
+        assert name not in dnp.__all__

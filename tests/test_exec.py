@@ -112,8 +112,12 @@ def test_async_channel_hides_latency():
     exposes it on worker clocks while the progress engine hides it —
     measured wait% must be lower with overlap on."""
     # 5 ms/message decisively dominates the ~0.1 ms/op dispatch overhead,
-    # keeping the ordering assertion stable on loaded CI machines
-    kw = dict(n=192, iters=4)
+    # keeping the ordering assertion stable on loaded CI machines.  The
+    # plan-stage passes are pinned OFF: coalescing shrinks the message
+    # count and with it the blocking-channel penalty this test relies on
+    # (the channel-discipline ordering under passes is covered in
+    # tests/test_plan.py at full margins).
+    kw = dict(n=192, iters=4, passes=())
     st_async, r_async = run_app(
         "jacobi_stencil", nprocs=4, block_size=48, flush_backend="async",
         exec_channel="async", exec_latency=5e-3, **kw)

@@ -1,0 +1,231 @@
+"""Plan-stage tests: the record → plan → execute pipeline, the pass
+registry, and the built-in passes (coalesce / fuse / batch).
+
+The invariant under test is the plan-stage correctness contract: a pass
+must preserve the relative program order of every pair of conflicting
+accesses, so planned graphs produce block contents bit-identical to the
+unplanned simulator.  ``test_plan_properties.py`` checks the same
+contract on random programs with hypothesis.
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro.api import ExecutionPolicy
+from repro.api.registry import PASSES
+from repro.core import DependencySystem, plan, resolve_pipeline
+from repro.core.plan import DEFAULT_ASYNC_PIPELINE
+
+from benchmarks.paper_apps import run_app
+
+
+# ---------------------------------------------------------------------------
+# pipeline resolution + registry
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_passes_registered():
+    names = repro.available_passes()
+    for name in ("coalesce", "fuse", "batch"):
+        assert name in names
+
+
+def test_resolve_pipeline():
+    assert resolve_pipeline("auto", "async") == DEFAULT_ASYNC_PIPELINE
+    assert resolve_pipeline("auto", "sim") == ()
+    assert resolve_pipeline("coalesce, fuse", "sim") == ("coalesce", "fuse")
+    assert resolve_pipeline((), "async") == ()
+    assert resolve_pipeline(None, "async") == ()
+    with pytest.raises(ValueError, match="unknown pass"):
+        resolve_pipeline("nope", "sim")
+
+
+def test_policy_validates_passes():
+    assert ExecutionPolicy(passes="coalesce,batch").passes == "coalesce,batch"
+    assert ExecutionPolicy(passes=["coalesce"]).passes == ("coalesce",)
+    assert ExecutionPolicy(flush="async").resolved_passes == DEFAULT_ASYNC_PIPELINE
+    assert ExecutionPolicy().resolved_passes == ()
+    with pytest.raises(ValueError, match="unknown pass"):
+        ExecutionPolicy(passes="nope")
+    with pytest.raises(ValueError, match="unknown pass"):
+        repro.Runtime(nprocs=2, passes="nope")
+
+
+def test_custom_pass_pluggable():
+    """A user pass registers by name and runs in the pipeline — the same
+    plugin mechanism as backends and channels."""
+    seen = {}
+
+    def tag_everything(ctx):
+        seen["ops"] = len(ctx.ops)
+        ctx.hints["tagged"] = True
+
+    repro.register_pass("tag-everything", tag_everything)
+    try:
+        with repro.runtime(nprocs=2, block_size=4,
+                           passes=("tag-everything",)) as rt:
+            a = repro.ones((8, 8))
+            np.asarray(a + 1.0)
+        assert seen["ops"] > 0
+        with pytest.raises(ValueError, match="already registered"):
+            repro.register_pass("tag-everything", lambda ctx: None)
+    finally:
+        PASSES.unregister("tag-everything")
+
+
+def test_plan_noop_without_pipeline():
+    deps = DependencySystem()
+    res = plan(deps, ())
+    assert res.deps is deps and res.hints == {}
+
+
+# ---------------------------------------------------------------------------
+# coalesce: fewer messages, same bits
+# ---------------------------------------------------------------------------
+
+
+def test_coalesce_sim_bit_identical_fewer_messages():
+    kw = dict(n=96, iters=3, nprocs=4, block_size=16)
+    st0, ref = run_app("jacobi_stencil", **kw)
+    st1, got = run_app("jacobi_stencil",
+                       policy=ExecutionPolicy(passes=("coalesce",)), **kw)
+    assert np.array_equal(ref, got)
+    assert 0 < st1.n_comm_ops < st0.n_comm_ops
+    assert st1.comm_bytes == st0.comm_bytes  # merged, not dropped
+
+
+def test_coalesce_async_fewer_posted_messages():
+    kw = dict(n=96, iters=3, nprocs=4, block_size=16)
+    _, ref = run_app("jacobi_stencil", **kw)
+    st1, got1 = run_app("jacobi_stencil", flush_backend="async",
+                        passes=("coalesce",), **kw)
+    st0, got0 = run_app("jacobi_stencil", flush_backend="async",
+                        passes=(), **kw)
+    assert np.array_equal(ref, np.asarray(got1))
+    assert np.array_equal(ref, np.asarray(got0))
+    assert 0 < st1.n_messages < st0.n_messages
+
+
+def test_replan_of_planned_graph_preserves_program_order():
+    """pending_ops must key on insertion (program) order, not uid: a
+    plan-created merged node has a larger uid than the recorded ops
+    around it, so re-planning a planned graph (flush retry, or more
+    recording after a manual plan) must not sort it past the consumers
+    of its scratch buffers."""
+    from repro.core import darray as dnp
+    from repro.core.plan import plan as run_plan
+
+    data = np.arange(144.0).reshape(12, 12)
+    with repro.Runtime(nprocs=4, block_size=3, passes=("coalesce",)) as rt:
+        a = dnp.array(data)
+        b = a[0:11, :] + a[1:12, :]  # halo reads cross block-row owners
+        planned = run_plan(rt.deps, ("coalesce",), storage=rt.storage)
+        assert planned.stats.n_transfers_coalesced > 0
+        ops = planned.deps.pending_ops()
+        assert [o.seq for o in ops] == list(range(len(ops)))
+        assert any(o.label.startswith("xfer-coalesced") for o in ops)
+        rt.deps = planned.deps
+        c = a[0:10, :] + a[2:12, :]  # fresh transfers into the planned graph
+        rb, rc = np.asarray(b), np.asarray(c)  # flush re-plans the mix
+        assert rt.plan_stats.n_transfers_coalesced > 0
+    np.testing.assert_array_equal(rb, data[0:11] + data[1:12])
+    np.testing.assert_array_equal(rc, data[0:10] + data[2:12])
+
+
+def test_coalesce_respects_intervening_writes():
+    """Transfers across a write to their source must not merge past it
+    (hoisting the read would see the wrong version)."""
+    with repro.runtime(nprocs=4, block_size=4, passes=("coalesce",)) as rt:
+        a = repro.array(np.arange(64.0).reshape(8, 8))
+        b = a[0:4, :] + a[4:8, :]  # cross-block reads -> transfers
+        a[:, :] = a * 2.0  # write to every block of a
+        c = a[0:4, :] + a[4:8, :]  # transfers of the NEW version
+        rb, rc = np.asarray(b), np.asarray(c)
+    base = np.arange(64.0).reshape(8, 8)
+    np.testing.assert_array_equal(rb, base[0:4] + base[4:8])
+    np.testing.assert_array_equal(rc, 2 * base[0:4] + 2 * base[4:8])
+
+
+# ---------------------------------------------------------------------------
+# fuse: map→reduce fusion, fill const-fold, dead-store elimination
+# ---------------------------------------------------------------------------
+
+
+def test_fuse_map_reduce_on_dead_temp():
+    data = np.arange(64.0).reshape(8, 8)
+    with repro.runtime(nprocs=4, block_size=3, passes=("fuse",)) as rt:
+        x = repro.array(data)
+        r = np.asarray((x * x).sum(axis=0))  # temp x*x is dead at flush
+        stats = rt.plan_stats
+    assert stats.n_fused > 0
+    assert stats.n_ops_out < stats.n_ops_in
+    np.testing.assert_array_equal(r, (data * data).sum(axis=0))
+
+
+def test_fuse_keeps_live_temps():
+    """A temporary that is still referenced (could be gathered later)
+    must not lose its block writes."""
+    data = np.arange(64.0).reshape(8, 8)
+    with repro.runtime(nprocs=4, block_size=3, passes=("fuse",)) as rt:
+        x = repro.array(data)
+        t = x * x  # live: we read it after the reduction
+        s = np.asarray(t.sum(axis=0))
+        tv = np.asarray(t)
+    np.testing.assert_array_equal(s, (data * data).sum(axis=0))
+    np.testing.assert_array_equal(tv, data * data)
+
+
+def test_fuse_const_folds_fills_and_drops_dead_stores():
+    with repro.runtime(nprocs=4, block_size=3, passes=("fuse",)) as rt:
+        x = repro.empty((8, 8))
+        x[:, :] = 3.0  # recorded fill
+        y = x * 2.0  # reads only the filled region
+        del x  # x is dead: fill becomes a dead store after folding
+        r = np.asarray(y)
+        stats = rt.plan_stats
+    assert stats.n_const_folded > 0
+    assert stats.n_dropped > 0
+    assert (r == 6.0).all()
+
+
+def test_fuse_partial_fill_not_folded():
+    """A fill covering only part of what the map reads must survive."""
+    data = np.arange(64.0).reshape(8, 8)
+    with repro.runtime(nprocs=4, block_size=8, passes=("fuse",)) as rt:
+        x = repro.array(data)
+        x[0:2, :] = 1.0  # partial fill of the single block
+        r = np.asarray(x * 1.0)
+    expect = data.copy()
+    expect[0:2, :] = 1.0
+    np.testing.assert_array_equal(r, expect)
+
+
+# ---------------------------------------------------------------------------
+# batch: strictly fewer handoffs, same bits
+# ---------------------------------------------------------------------------
+
+
+def _chain(passes, steps=40, nblocks=8, block=16):
+    with repro.runtime(nprocs=4, block_size=block, flush="async",
+                       passes=passes) as rt:
+        a = repro.ones((nblocks * block,))
+        for _ in range(steps):
+            a += 1.0
+        return rt.stats(), np.asarray(a)
+
+
+def test_batch_dispatch_fewer_handoffs():
+    st_b, r_b = _chain(("batch",))
+    st_u, r_u = _chain(())
+    np.testing.assert_array_equal(r_b, r_u)
+    assert 0 < st_b.n_handoffs < st_u.n_handoffs
+
+
+def test_default_async_pipeline_reports_counters():
+    """The auto pipeline wires its wins into the measured WaitStats."""
+    st, _ = run_app("jacobi_stencil", nprocs=4, block_size=16,
+                    flush_backend="async", n=64, iters=2)
+    assert st.n_handoffs > 0
+    assert st.n_messages == st.n_comm_ops > 0  # coalesced posts, counted once
+    assert st.handoffs_per_flush > 0
+    assert st.ops_per_sec > 0

@@ -1,0 +1,92 @@
+"""Property-based plan-stage invariant: any registered pass pipeline
+preserves the total order of conflicting accesses, so planned graphs
+stay bit-identical to the unplanned simulator on random programs.
+
+Random programs mix fills, strided slice writes, elementwise maps with
+cross-block transfers, in-place updates, and reductions over dead
+temporaries — the exact shapes the coalesce/fuse rewrites target.
+"""
+import numpy as np
+import pytest
+
+pytest.importorskip("hypothesis")  # property tests need the dev extra
+from hypothesis import given, settings, strategies as st
+
+import repro
+
+SHAPE = (8, 6)
+N_ARRAYS = 3
+
+# one program step: (kind, *params); indexes are taken modulo the pool
+_step = st.one_of(
+    st.tuples(st.just("fill"), st.integers(0, 9), st.integers(0, 7),
+              st.integers(0, 5), st.floats(-4, 4, allow_nan=False)),
+    st.tuples(st.just("binop"), st.integers(0, 9), st.integers(0, 9),
+              st.sampled_from(["add", "mul", "max"])),
+    st.tuples(st.just("setslice"), st.integers(0, 9), st.integers(0, 9),
+              st.integers(0, 7)),
+    st.tuples(st.just("iadd"), st.integers(0, 9), st.integers(0, 9)),
+    st.tuples(st.just("sumexpr"), st.integers(0, 9), st.integers(0, 9),
+              st.integers(0, 1)),
+    st.tuples(st.just("reduce"), st.integers(0, 9), st.integers(0, 1)),
+)
+programs = st.lists(_step, min_size=1, max_size=10)
+
+_BINOPS = {
+    "add": lambda a, b: a + b,
+    "mul": lambda a, b: a * b,
+}
+
+
+def _run(prog, passes):
+    from repro.core import darray as dnp
+
+    with repro.runtime(nprocs=4, block_size=3, passes=passes):
+        arrs = [
+            dnp.array(np.arange(48.0).reshape(SHAPE) * (i + 1) - 20.0)
+            for i in range(N_ARRAYS)
+        ]
+        outs = []
+        for step in prog:
+            kind = step[0]
+            if kind == "fill":
+                _, d, r0, c0, v = step
+                dst = arrs[d % len(arrs)]
+                dst[r0 % SHAPE[0]:, c0 % SHAPE[1]:] = float(v)
+            elif kind == "binop":
+                _, a, b, opname = step
+                x, y = arrs[a % len(arrs)], arrs[b % len(arrs)]
+                if opname == "max":
+                    arrs.append(dnp.maximum(x, y))
+                else:
+                    arrs.append(_BINOPS[opname](x, y))
+            elif kind == "setslice":
+                _, d, s, r0 = step
+                dst, src = arrs[d % len(arrs)], arrs[s % len(arrs)]
+                lo = r0 % SHAPE[0]
+                dst[lo:, :] = src[lo:, :]
+            elif kind == "iadd":
+                _, d, s = step
+                if d % len(arrs) != s % len(arrs):
+                    arrs[d % len(arrs)] += arrs[s % len(arrs)]
+            elif kind == "sumexpr":
+                _, a, b, ax = step
+                x, y = arrs[a % len(arrs)], arrs[b % len(arrs)]
+                outs.append((x * y).sum(axis=ax))  # dead temp -> fuse target
+            elif kind == "reduce":
+                _, a, ax = step
+                outs.append(arrs[a % len(arrs)].sum(axis=ax))
+        return [np.asarray(a).copy() for a in arrs] + [
+            np.asarray(o).copy() for o in outs
+        ]
+
+
+@settings(max_examples=20, deadline=None)
+@given(prog=programs)
+def test_passes_bit_identical_to_unplanned_simulator(prog):
+    baseline = _run(prog, passes=())
+    for pipeline in (("coalesce",), ("fuse",), ("coalesce", "fuse")):
+        got = _run(prog, passes=pipeline)
+        assert len(got) == len(baseline)
+        for ref, out in zip(baseline, got):
+            np.testing.assert_array_equal(ref, out, err_msg=f"{pipeline}")
