@@ -1,9 +1,10 @@
 """Dispatch-overhead smoke: the plan-stage acceptance gate, runnable in CI.
 
     PYTHONPATH=src python -m benchmarks.dispatch_smoke [--ops 10000]
+    PYTHONPATH=src python -m benchmarks.dispatch_smoke --demand
 
-Two checks, both against the measured (``flush_backend="async"``)
-executor:
+Default mode runs two checks, both against the measured
+(``flush_backend="async"``) executor:
 
 1. **Batched handoffs** — a ~``--ops``-operation elementwise chain is
    drained with and without the ``batch`` plan pass.  The batched run
@@ -14,8 +15,15 @@ executor:
    without the ``coalesce`` pass.  The coalesced run must post *fewer*
    channel messages; results must be bit-identical.
 
-Exits non-zero (assertion) on any regression — wired into CI as the
-``dispatch-overhead`` job.
+``--demand`` runs the demand-driven-overlap gate instead (CI job
+``overlap-smoke``): a ~``--ops``-operation graph of independent
+single-block chains is recorded, then ONE chain is read back.  Under
+``sync="demand"`` that readback must drain **< 5 %** of the recorded
+operations (its dependency cone — one chain), and forcing the remaining
+arrays must produce results bit-identical to the same program under
+``sync="barrier"``.
+
+Exits non-zero (assertion) on any regression.
 """
 from __future__ import annotations
 
@@ -51,13 +59,65 @@ def stencil_messages(passes, n: int = 128, iters: int = 2, nprocs: int = 4):
     return st, np.asarray(r)
 
 
+def demand_readback(ops: int, sync: str, nprocs: int = 4, nchains: int = 32):
+    """Record ``nchains`` independent single-block ``a += 1`` chains
+    (~``ops`` operations total), read back ONE of them, then the rest.
+    Returns (recorded ops, ops drained by the first readback, results)."""
+    import repro
+
+    block = 64
+    per = max(1, ops // nchains)
+    with repro.runtime(
+        nprocs=nprocs, block_size=block, flush="async", sync=sync
+    ) as rt:
+        arrs = [repro.ones((block,)) for _ in range(nchains)]
+        for _ in range(per):
+            for a in arrs:
+                a += 1.0
+        recorded = rt.deps.n_pending
+        first = np.asarray(arrs[0])
+        st = rt.stats()
+        drained = st.n_compute_ops + st.n_comm_ops
+        rest = [np.asarray(a) for a in arrs[1:]]
+        return recorded, drained, [first] + rest
+
+
+def run_demand_gate(ops: int) -> None:
+    print(f"== demand-driven overlap: 1-block cone out of a ~{ops}-op graph ==")
+    rec_d, drained_d, res_d = demand_readback(ops, sync="demand")
+    frac = drained_d / max(1, rec_d)
+    print(f"  recorded={rec_d} ops; first readback drained {drained_d} "
+          f"({frac * 100:.2f}% of the graph)")
+    assert frac < 0.05, (
+        f"demand readback drained {frac * 100:.2f}% of the recorded graph "
+        f"(required < 5%): the dependency cone leaked"
+    )
+    rec_b, drained_b, res_b = demand_readback(ops, sync="barrier")
+    print(f"  barrier reference: first readback drained {drained_b} "
+          f"of {rec_b} ops")
+    assert drained_b == rec_b, "barrier sync no longer drains everything?"
+    for i, (d, b) in enumerate(zip(res_d, res_b)):
+        assert np.array_equal(d, b), (
+            f"demand forcing changed the numerical result (array {i})!"
+        )
+    print("  results bit-identical to sync='barrier'")
+    print("overlap smoke: OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ops", type=int, default=10_000,
                     help="approximate chain length for the handoff check")
     ap.add_argument("--min-ratio", type=float, default=5.0,
                     help="required handoff reduction at --ops >= 10000")
+    ap.add_argument("--demand", action="store_true",
+                    help="run the demand-driven overlap gate instead "
+                         "(CI job overlap-smoke)")
     args = ap.parse_args()
+
+    if args.demand:
+        run_demand_gate(args.ops)
+        return
 
     print(f"== batched dispatch: ~{args.ops}-op elementwise chain ==")
     st_b, r_b = chain_handoffs(args.ops, passes=("batch",))

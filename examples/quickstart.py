@@ -5,21 +5,31 @@ latency-hiding — the program below uses only the NumPy namespace on
 distributed arrays (the paper's only API delta is creation time:
 ``repro.array`` / ``repro.ones`` inside a ``repro.runtime`` context).
 
+Readback is demand-driven: ``np.asarray(x)`` / ``repro.gather(x)``
+force only ``x``'s dependency cone (under ``sync="demand"``; the
+default resolves per flush backend, and ``REPRO_SYNC=demand|barrier``
+overrides it here).
+
     PYTHONPATH=src python examples/quickstart.py
 """
+import os
+
 import numpy as np
 
 import repro
 
+SYNC = os.environ.get("REPRO_SYNC", "auto")
+
 # 16 virtual processes, paper-calibrated GbE cluster model
-with repro.runtime(nprocs=16, block_size=64) as rt:
+with repro.runtime(nprocs=16, block_size=64, sync=SYNC) as rt:
     # --- plain NumPy code -----------------------------------------------
     a = repro.array(np.linspace(0.0, 1.0, 256 * 256).reshape(256, 256))
     b = repro.ones((256, 256))
     c = np.sqrt(a * a + b) / 2.0           # elementwise, auto-parallel
     d = np.matmul(c, c)                    # distributed blocked matmul
     col_sums = np.sum(d, axis=0)           # distributed reduction
-    result = np.asarray(col_sums)          # readback triggers the flush
+    fut = repro.evaluate(col_sums)         # start draining its cone (async)
+    result = fut.result()                  # block + gather the ndarray
     stats = rt.stats()
 
 oracle_c = np.sqrt(
@@ -28,6 +38,6 @@ oracle_c = np.sqrt(
 oracle = (oracle_c @ oracle_c).sum(axis=0)
 np.testing.assert_allclose(result, oracle, rtol=1e-10)
 
-print("matches NumPy oracle ✓")
+print(f"matches NumPy oracle ✓ (sync={SYNC!r})")
 print(repro.format_stats([("quickstart", stats)]))
 print(f"waiting-on-comm share: {stats.wait_fraction * 100:.1f}%")

@@ -10,7 +10,13 @@ backends and transfer channels resolved exclusively through the plugin
 registry (``repro.available_backends()``).
 
     PYTHONPATH=src python examples/stencil_latency_hiding.py
+
+Readback sync is demand-driven by default under the measured backend
+(every ``np.asarray`` forces only its dependency cone);
+``REPRO_SYNC=demand|barrier`` pins it for every policy below.
 """
+import os
+
 import jax
 import numpy as np
 
@@ -21,6 +27,7 @@ jax.config.update("jax_enable_x64", True)
 import repro
 from repro.api import ExecutionPolicy, RuntimeConfig, format_stats
 
+SYNC = os.environ.get("REPRO_SYNC", "auto")
 N, ITERS = 1024, 6
 
 
@@ -51,7 +58,7 @@ print(f"Jacobi stencil {N}x{N}, {ITERS} sweeps, 16 processes "
       f"(paper fig. 18 setup)\n")
 
 cfg = RuntimeConfig(nprocs=16, block_size=128)
-lh = ExecutionPolicy(scheduler="latency_hiding")
+lh = ExecutionPolicy(scheduler="latency_hiding", sync=SYNC)
 
 st_lh, r_lh = run(cfg, lh, N, ITERS)
 st_bl, r_bl = run(cfg, lh.replace(scheduler="blocking"), N, ITERS)
@@ -84,9 +91,11 @@ print(f"\nlatency-hiding wall-clock win: {st_bl.makespan/st_lh.makespan:.2f}x "
 # passes-off drain by the plan-stage ordering contract.
 MN, MITERS, MPROCS, ALPHA = 256, 4, 8, 10e-3
 mcfg = RuntimeConfig(nprocs=MPROCS, block_size=64)
-measured = ExecutionPolicy(flush="async", channel="async", latency=ALPHA)
+measured = ExecutionPolicy(flush="async", channel="async", latency=ALPHA,
+                           sync=SYNC)
 sim_alpha = ExecutionPolicy(
-    cluster=repro.GIGE_2012.replace(alpha=ALPHA, name="gige-alpha-10ms")
+    cluster=repro.GIGE_2012.replace(alpha=ALPHA, name="gige-alpha-10ms"),
+    sync=SYNC,
 )
 
 st_sim_on, _ = run(mcfg, sim_alpha, MN, MITERS)

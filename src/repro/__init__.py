@@ -20,7 +20,12 @@ _API_EXPORTS = (
     "RuntimeConfig",
     "ExecutionPolicy",
     "Runtime",
+    "FlushTicket",
     "current_runtime",
+    "ArrayFuture",
+    "evaluate",
+    "gather",
+    "wait",
     "register_backend",
     "get_backend",
     "available_backends",

@@ -3,6 +3,12 @@
 One import surface for the paper's promise (*sequential NumPy programs,
 unmodified*) and the runtime knobs around it:
 
+* **Evaluation** — demand-driven futures: :func:`evaluate` starts
+  draining an array's dependency cone without blocking (returns
+  :class:`ArrayFuture`), :func:`gather` blocks and returns the host
+  ndarray, :func:`wait` / ``DistArray.block_until_ready()`` give
+  JAX-style explicit sync.  ``ExecutionPolicy(sync="barrier")`` is the
+  escape hatch back to the paper's whole-graph readback barrier.
 * **Config objects** — :class:`RuntimeConfig` / :class:`ExecutionPolicy`
   frozen dataclasses and the :func:`runtime` context-manager helper
   replace the ``Runtime(...)`` kwarg soup.
@@ -35,6 +41,7 @@ time, so the registry layer must stay importable from inside
 ``repro.core`` without cycling back through the array layer.
 """
 from .config import ExecutionPolicy, RuntimeConfig, runtime
+from .futures import ArrayFuture, evaluate, gather, wait
 from .registry import (
     available_backends,
     available_channels,
@@ -65,6 +72,7 @@ _CORE_EXPORTS = {
     "matmul": "repro.core.darray",
     "roll": "repro.core.darray",
     "Runtime": "repro.core.engine",
+    "FlushTicket": "repro.core.engine",
     "current_runtime": "repro.core.engine",
     "ClusterSpec": "repro.core.timeline",
     "GIGE_2012": "repro.core.timeline",
@@ -76,6 +84,11 @@ __all__ = [
     "runtime",
     "RuntimeConfig",
     "ExecutionPolicy",
+    # demand-driven evaluation (futures surface)
+    "ArrayFuture",
+    "evaluate",
+    "gather",
+    "wait",
     # registries
     "register_backend",
     "get_backend",

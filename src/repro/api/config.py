@@ -88,6 +88,13 @@ class ExecutionPolicy(_Replaceable):
     # flush, none under the simulator), a comma-separated string, or a
     # tuple of registered pass names (repro.register_pass)
     passes: Union[str, tuple] = "auto"
+    # readback discipline: "demand" drains only the dependency cone of
+    # the array being read (futures surface: repro.evaluate / gather /
+    # wait), "barrier" drains the whole recorded graph on every readback
+    # (the paper's §5.6 semantics — the escape hatch that keeps old
+    # programs and all paper figures bit-identical).  "auto" = demand
+    # under flush="async", barrier under the simulator.
+    sync: str = "auto"
 
     def __post_init__(self):
         if self.scheduler not in registry.SCHEDULERS:
@@ -106,6 +113,10 @@ class ExecutionPolicy(_Replaceable):
             raise ValueError(
                 f"unknown channel {self.channel!r} "
                 f"(registered: {', '.join(registry.available_channels())})"
+            )
+        if self.sync not in ("auto", "demand", "barrier"):
+            raise ValueError(
+                f"unknown sync {self.sync!r} (auto|demand|barrier)"
             )
         if isinstance(self.latency, str) and self.latency != "alpha":
             raise ValueError(
@@ -138,6 +149,15 @@ class ExecutionPolicy(_Replaceable):
         from repro.core.plan import resolve_pipeline
 
         return resolve_pipeline(self.passes, self.flush)
+
+    @property
+    def resolved_sync(self) -> str:
+        """The readback discipline after resolving ``"auto"``: demand-
+        driven cone flushes under the measured async backend, the
+        paper's whole-graph barrier under the simulator."""
+        if self.sync != "auto":
+            return self.sync
+        return "demand" if self.flush == "async" else "barrier"
 
     @property
     def resolved_channel(self) -> str:

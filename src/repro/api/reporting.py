@@ -36,10 +36,11 @@ def format_stats(rows, header: bool = True, dispatch: bool = True) -> str:
     volume columns, identical for both sources.
 
     With ``dispatch=True`` (default) a ``dispatch:`` line per row shows
-    the dispatch-overhead counters: drained ops per second, worker
-    handoffs per flush, and channel messages per flush — measured rows
-    only carry the last two (the simulator has no worker queues), shown
-    as ``-`` otherwise.
+    the dispatch-overhead counters: drained ops per second, ops drained
+    per flush (= per readback under demand-driven sync, where every
+    readback is one cone flush), worker handoffs per flush, and channel
+    messages per flush — measured rows only carry the last two (the
+    simulator has no worker queues), shown as ``-`` otherwise.
     """
     if isinstance(rows, tuple) and len(rows) == 2 and isinstance(rows[0], str):
         rows = [rows]
@@ -57,12 +58,18 @@ def format_stats(rows, header: bool = True, dispatch: bool = True) -> str:
             # the stats objects own the arithmetic; the simulator has no
             # worker queues or channel, so those columns render as "-"
             ops_s = f"{st.ops_per_sec:,.0f}" if st.makespan > 0 else "-"
+            nfl = getattr(st, "n_flushes", 0)
+            opf = (
+                f"{(st.n_compute_ops + st.n_comm_ops) / nfl:,.0f}"
+                if nfl else "-"
+            )
             nh = getattr(st, "handoffs_per_flush", None)
             nm = getattr(st, "messages_per_flush", None)
             hand = "-" if nh is None else f"{nh:,.0f}"
             msgs = "-" if nm is None else f"{nm:,.0f}"
             lines.append(
                 f"dispatch: {label:<26s} ops/s={ops_s:>12s} "
+                f"ops/flush={opf:>9s} "
                 f"handoffs/flush={hand:>8s} msgs/flush={msgs:>8s}"
             )
     return "\n".join(lines)

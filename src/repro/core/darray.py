@@ -3,7 +3,10 @@
 ``array(..., dist=True)`` etc. mirror the paper's only API difference from
 NumPy.  All operations on :class:`DistArray` are recorded lazily into the
 active :class:`~repro.core.engine.Runtime`; reading data back (``__array__``,
-``item``, comparisons) triggers an operation flush (§5.6).
+``item``, comparisons) triggers an operation flush (§5.6) — under
+``sync="demand"`` a *partial* one, draining only the reader's dependency
+cone, with :meth:`DistArray.evaluate` / :meth:`DistArray.block_until_ready`
+as the explicit JAX-style spellings.
 
 The paper's central promise — *no user-visible change to the NumPy
 programming model* — is carried by the NumPy array protocols:
@@ -240,6 +243,13 @@ class Expr:
     def __array__(self, dtype=None, copy=None):
         return self.materialize().__array__(dtype)
 
+    def evaluate(self):
+        """Materialize the tree and start draining its cone without
+        blocking (see :meth:`DistArray.evaluate`)."""
+        from repro.api.futures import evaluate as _evaluate
+
+        return _evaluate(self)
+
     # -- reductions (np.sum(expr) etc. land here via the protocols) --------
     def _reduce(self, name: str, axis, keepdims: bool) -> "DistArray":
         return self.materialize()._reduce(name, axis, keepdims)
@@ -474,6 +484,21 @@ class DistArray:
 
     def max(self, axis=None, keepdims=False):
         return self._reduce("maximum", axis, keepdims)
+
+    # -- demand-driven evaluation (futures surface) ---------------------------
+    def evaluate(self) -> "object":
+        """Start draining this array's dependency cone without blocking;
+        returns a :class:`repro.api.futures.ArrayFuture` (JAX-style
+        async dispatch — recording continues while workers drain)."""
+        from repro.api.futures import evaluate as _evaluate
+
+        return _evaluate(self)
+
+    def block_until_ready(self) -> "DistArray":
+        """Block until every pending operation this array depends on has
+        executed (its dependency cone under ``sync="demand"``, the whole
+        graph under ``sync="barrier"``); returns self, JAX-style."""
+        return self.evaluate().block_until_ready()
 
     # -- readback (flush triggers, §5.6) -------------------------------------
     def __array__(self, dtype=None, copy=None):

@@ -12,6 +12,14 @@ A *flush* (triggered by a read of distributed data, by the recorded-op
 threshold, or by context exit — §5.6) drains the dependency system through
 :func:`repro.core.scheduler.run_schedule`, simultaneously executing the
 real NumPy block work and accounting the timeline on the cluster model.
+
+Flushes are *demand-driven* (``sync="demand"``): a readback extracts and
+drains only the dependency cone of the blocks being read
+(:func:`repro.core.graph.producer_cone`), and ``flush(wait=False)``
+submits the drain to the persistent executor and returns a
+:class:`FlushTicket` instead of joining, so recording overlaps the
+drain.  ``sync="barrier"`` restores the paper's whole-graph blocking
+flush (the simulator default).
 """
 from __future__ import annotations
 
@@ -31,7 +39,14 @@ from .blocks import (
     default_process_grid,
     fragment_iteration_space,
 )
-from .graph import COMM, COMPUTE, AccessNode, DependencySystem, OperationNode
+from .graph import (
+    COMM,
+    COMPUTE,
+    AccessNode,
+    DependencySystem,
+    OperationNode,
+    producer_cone,
+)
 from .scheduler import run_schedule  # noqa: F401  (registers the built-in modes)
 from .timeline import GIGE_2012, ClusterSpec, TimelineResult
 from .ufunc import UFunc, get_ufunc, reduce_fn
@@ -39,6 +54,7 @@ from .ufunc import UFunc, get_ufunc, reduce_fn
 __all__ = [
     "Runtime",
     "ArrayBase",
+    "FlushTicket",
     "current_runtime",
     "execute_payload",
     "resolve_ref",
@@ -229,6 +245,50 @@ def execute_payload(p, storage: dict, scratch: dict) -> None:
         raise TypeError(f"unknown payload {type(p)}")
 
 
+class FlushTicket:
+    """Handle on one (possibly still draining) flush — what
+    ``Runtime.flush(wait=False)`` returns instead of joining the
+    executor.
+
+    ``wait()`` blocks until the drain completes, merges the drain's
+    measured stats into the runtime's accumulated statistics exactly
+    once, and returns the flush's stats object; ``done()`` polls.  A
+    ticket for a simulated (or empty) flush comes back already
+    completed — the API surface is uniform across backends.
+    """
+
+    __slots__ = ("_rt", "_fut", "_stats", "_resolved")
+
+    def __init__(self, rt: "Runtime", fut=None, stats=None):
+        self._rt = rt
+        self._fut = fut  # repro.exec Future -> WaitStats, or None
+        self._stats = stats  # pre-completed result (sim flush / empty cone)
+        self._resolved = fut is None
+
+    def done(self) -> bool:
+        return self._resolved or self._fut.done()
+
+    def wait(self, timeout: Optional[float] = None):
+        """Block until the drain completes.  Returns the flush's stats
+        (a :class:`repro.exec.WaitStats` for async drains, a
+        :class:`TimelineResult` for simulated ones, ``None`` when the
+        flush had nothing to drain); raises the drain's failure."""
+        if self._resolved:
+            return self._stats
+        try:
+            res = self._fut.result(timeout)
+        except TimeoutError:
+            raise  # still in flight — the ticket stays waitable
+        except BaseException:
+            self._resolved = True
+            self._rt._ticket_failed(self)
+            raise
+        self._resolved = True
+        self._stats = res
+        self._rt._ticket_done(self, res)
+        return res
+
+
 class ArrayBase:
     """The array-base (paper §5.1): owns the actual memory via the runtime's
     block storage; never manipulated directly by the user."""
@@ -263,6 +323,7 @@ class Runtime:
         exec_latency: Union[float, str] = 0.0,  # seconds, or "alpha"
         exec_progress_threads: int = 2,
         passes: Union[str, Sequence[str]] = "auto",
+        sync: str = "auto",
     ):
         self.nprocs = nprocs
         self.block_size = block_size
@@ -320,10 +381,26 @@ class Runtime:
 
         self.passes = resolve_pipeline(passes, flush_backend)
         self.plan_stats = PlanStats()
-        # compute backend + channel persist across flushes (jit caches and
-        # progress threads are expensive to rebuild); created lazily
+        # readback discipline: "demand" drains only the dependency cone of
+        # the array being read, "barrier" the whole recorded graph (the
+        # paper's §5.6 semantics).  "auto" resolves to demand under the
+        # measured async backend and barrier under the simulator, so every
+        # paper figure stays bit-identical by default.
+        if sync not in ("auto", "demand", "barrier"):
+            raise ValueError(f"unknown sync {sync!r} (auto|demand|barrier)")
+        self.sync_mode = (
+            sync
+            if sync != "auto"
+            else ("demand" if flush_backend == "async" else "barrier")
+        )
+        # compute backend + channel + executor persist across flushes (jit
+        # caches, progress threads and the worker pool are expensive to
+        # rebuild); created lazily, released by close()
         self._exec_backend_obj = None
         self._exec_channel_obj = None
+        self._exec_executor_obj = None
+        self._tickets: list[FlushTicket] = []  # outstanding wait=False flushes
+        self._closed = False
 
         self.deps = DependencySystem()
         self.storage: dict[tuple, np.ndarray] = {}  # (base_id, coord) -> block
@@ -363,6 +440,9 @@ class Runtime:
             exec_latency=policy.latency,
             exec_progress_threads=policy.progress_threads,
             passes=policy.passes,
+            # resolved here so ExecutionPolicy.resolved_sync is the single
+            # authority on what "auto" means for the config path
+            sync=policy.resolved_sync,
         )
 
     # -- context management -------------------------------------------------
@@ -375,14 +455,36 @@ class Runtime:
     def __exit__(self, exc_type, exc, tb):
         try:
             if exc_type is None:
-                self.flush()  # §5.6 trigger 3: end of program
+                self.flush()  # §5.6 trigger 3: end of program (a barrier)
         finally:
             _tls.runtime = None
+            self.close()
+        return False
+
+    def close(self) -> None:
+        """Release executor resources: join any in-flight drain, stop the
+        persistent worker pool, and shut down the channel's progress
+        threads.  ``__exit__`` calls this on both the clean and the
+        exception path; double-close is a no-op."""
+        if self._closed:
+            return
+        try:
+            try:
+                self._sync_outstanding()
+            except Exception:
+                # a failed background drain already dropped its executor;
+                # the resource release below must still happen (the error
+                # surfaced — or will — at the wait()/readback site)
+                pass
+        finally:
+            self._closed = True
+            if self._exec_executor_obj is not None:
+                self._exec_executor_obj.close()
+                self._exec_executor_obj = None
             if self._exec_channel_obj is not None:
                 self._exec_channel_obj.close()
                 self._exec_channel_obj = None
                 self._exec_backend_obj = None
-        return False
 
     # -- array creation -------------------------------------------------------
     def _make_layout(self, shape, block_shape=None) -> Layout:
@@ -434,13 +536,34 @@ class Runtime:
             )
 
     def gather(self, base: ArrayBase, view: ViewSpec) -> np.ndarray:
-        """Read back a view (flushes first — §5.6 trigger 1)."""
-        self.flush()
-        out = np.empty(view.vshape, dtype=base.dtype)
+        """Read back a view (flushes first — §5.6 trigger 1).
+
+        Under ``sync="demand"`` only the dependency cone of the blocks
+        ``view`` touches is drained — the transitive producer closure of
+        their pending writes — and everything else stays recorded; under
+        ``sync="barrier"`` the whole graph is drained (the paper's
+        original semantics)."""
         spec = OperandSpec(view, base.layout, tuple(range(view.ndim)))
+        if self.sync_mode == "demand":
+            keys = {
+                (base.id, frag.block)
+                for _, (frag,) in fragment_iteration_space(view.vshape, (spec,))
+            }
+            self.flush(targets=keys)
+        else:
+            self.flush()
+        out = np.empty(view.vshape, dtype=base.dtype)
         for vint, (frag,) in fragment_iteration_space(view.vshape, (spec,)):
             dst = tuple(slice(lo, hi) for lo, hi in vint)
-            out[dst] = self.storage[(base.id, frag.block)][frag.slices]
+            blk = self.storage.get((base.id, frag.block))
+            if blk is None:
+                raise RuntimeError(
+                    f"array base {base.id} has no block storage — its blocks "
+                    f"were purged after every owning array was garbage-"
+                    f"collected; keep a reference to the DistArray (or its "
+                    f"ArrayFuture) until readback"
+                )
+            out[dst] = blk[frag.slices]
         return out
 
     # -- recording ------------------------------------------------------------
@@ -513,7 +636,14 @@ class Runtime:
 
     def _maybe_flush(self) -> None:
         if self._in_record == 0 and self._recorded_since_flush >= self.flush_threshold:
-            self.flush()  # §5.6 trigger 2: threshold
+            # §5.6 trigger 2: threshold.  A demand-driven async runtime
+            # kicks the drain off WITHOUT joining it — communication is
+            # initiated as aggressively as possible while the main thread
+            # keeps recording (the paper's motivation, on real threads).
+            if self.sync_mode == "demand" and self.flush_backend == "async":
+                self.flush(wait=False)
+            else:
+                self.flush()
 
     def record_map(
         self,
@@ -699,56 +829,139 @@ class Runtime:
         execute_payload(op.payload, self.storage, self.scratch)
 
     # -- flush (§5.6 record -> plan -> §5.7 execute) --------------------------
-    def flush(self):
-        """Drain the recorded dependency system.  Returns the per-flush
-        stats object: a :class:`TimelineResult` under the simulated
-        backend, a :class:`repro.exec.WaitStats` under the async one.
+    def flush(self, wait: bool = True, targets=None):
+        """Drain recorded operations — all of them, or just the
+        dependency cone of ``targets``.
 
-        The flush is a three-stage pipeline: the *recorded* graph first
-        goes through the *plan* stage (:func:`repro.core.plan.plan` runs
-        the configured pass pipeline — transfer coalescing, cross-kind
-        fusion, batch-dispatch hints), then the planned graph is
-        *executed* by the scheduler or the async executor."""
-        if self.deps.n_pending == 0:
-            self._purge_dead()
-            return None
+        ``targets`` (``None`` = whole graph) is an iterable of
+        DistArrays / ArrayBases / base ids: only the transitive producer
+        closure of their pending writes
+        (:func:`repro.core.graph.producer_cone`) is extracted,
+        re-inserted via ``DependencySystem.rebuild``, planned, and
+        drained; the rest of the recorded graph stays pending.
+
+        ``wait=True`` blocks until the drain completes and returns the
+        per-flush stats object (:class:`TimelineResult` under the
+        simulated backend, :class:`repro.exec.WaitStats` under the async
+        one, ``None`` when nothing had to be drained).  ``wait=False``
+        submits the drain to the persistent executor and returns a
+        :class:`FlushTicket` immediately, so recording continues on the
+        main thread while workers drain and communication overlaps with
+        Python-side recording (under the simulated backend the drain is
+        synchronous and the ticket comes back completed).
+
+        Any previously returned ticket is joined first — drains are
+        serialized; the overlap is between one drain and main-thread
+        recording, never between two drains.
+
+        The flush remains a three-stage pipeline: the (cone of the)
+        *recorded* graph goes through the *plan* stage
+        (:func:`repro.core.plan.plan` runs the configured pass pipeline
+        on the cone only), then the planned graph is *executed* by the
+        scheduler or the async executor."""
+        if self._closed:
+            raise RuntimeError("Runtime is closed")
+        self._sync_outstanding()
+        deps = self.deps
+        dead = set(self._dead_bases)
+        if targets is not None:
+            cone_ops, rest_ops = producer_cone(
+                deps.pending_ops(), self._resolve_targets(targets)
+            )
+            if not cone_ops:
+                self._barrier_cleanup()
+                return None if wait else FlushTicket(self)
+            # a GC'd base only licenses dead-store elimination when no
+            # *remainder* operation still touches it: the cone may hold a
+            # dead temp's producer (pulled in as an anti-dependency) while
+            # its consumer stays pending — that store is NOT dead yet
+            dead -= {
+                acc.key[0] for op in rest_ops for acc in op.accesses
+            }
+            self.deps = DependencySystem.rebuild(rest_ops)
+            deps = DependencySystem.rebuild(cone_ops)
+        else:
+            if deps.n_pending == 0:
+                self._barrier_cleanup()
+                return None if wait else FlushTicket(self)
+            self.deps = DependencySystem()  # recording continues here
         hints = {}
         if self.passes:
             from .plan import plan as run_plan
 
             planned = run_plan(
-                self.deps,
+                deps,
                 self.passes,
-                dead_bases=set(self._dead_bases),
+                dead_bases=dead,
                 storage=self.storage,
             )
-            self.deps = planned.deps
+            deps = planned.deps
             hints = planned.hints
             self.plan_stats.merge(planned.stats)
-        if self.flush_backend == "async":
-            res = self._flush_async(hints)
-        else:
-            from repro.api.registry import get_scheduler
-
-            res = get_scheduler(self.mode)(
-                self.deps,
-                self.cluster,
-                executor=self._execute if self.execute else None,
-            )
-            self.result.merge(res)
         self.flush_count += 1
-        self._recorded_since_flush = 0
-        self.scratch.clear()
-        self._xfer_cache.clear()
-        self._combine_seen.clear()
-        self._purge_dead()
-        return res
+        self._recorded_since_flush = self.deps.n_pending
+        if self.flush_backend == "async":
+            ticket = self._flush_async(deps, hints)
+            if wait:
+                res = ticket.wait()
+                self._barrier_cleanup()
+                return res
+            self._tickets.append(ticket)
+            return ticket
+        from repro.api.registry import get_scheduler
 
-    def _flush_async(self, hints=None):
-        """Drain through the real multi-worker executor (repro.exec)."""
+        res = get_scheduler(self.mode)(
+            deps,
+            self.cluster,
+            executor=self._execute if self.execute else None,
+        )
+        self.result.merge(res)
+        self._barrier_cleanup()
+        return res if wait else FlushTicket(self, stats=res)
+
+    @staticmethod
+    def _resolve_targets(targets) -> set:
+        """Normalize flush targets to the mixed set
+        :func:`~repro.core.graph.producer_cone` takes: base ids (ints —
+        every block of that base) and/or exact ``(base_id, block)``
+        keys.  A DistArray contributes only the block keys its *view*
+        touches, so reading a sub-view forces a sub-cone."""
+        ids = set()
+        for t in targets:
+            if isinstance(t, (int, np.integer)):
+                ids.add(int(t))
+            elif isinstance(t, tuple):
+                ids.add(t)  # explicit (base_id, block) access key
+            elif isinstance(t, ArrayBase):
+                ids.add(t.id)
+            else:
+                base = getattr(t, "_base", None)  # DistArray, duck-typed
+                view = getattr(t, "_view", None)
+                if not isinstance(base, ArrayBase):
+                    raise TypeError(
+                        f"cannot flush towards {type(t).__name__}: expected a "
+                        f"DistArray, an ArrayBase, a base id, or a "
+                        f"(base_id, block) key"
+                    )
+                spec = OperandSpec(view, base.layout, tuple(range(view.ndim)))
+                for _, (frag,) in fragment_iteration_space(
+                    view.vshape, (spec,)
+                ):
+                    ids.add((base.id, frag.block))
+        return ids
+
+    def _flush_async(self, deps, hints) -> FlushTicket:
+        """Submit ``deps`` to the persistent multi-worker executor
+        (repro.exec) and return the in-flight ticket without joining."""
+        executor = self._ensure_executor()
+        fut = executor.submit(
+            deps, batch_dispatch=bool(hints.get("batch_dispatch"))
+        )
+        return FlushTicket(self, fut=fut)
+
+    def _ensure_executor(self):
         from repro.exec import AsyncExecutor, make_backend, make_channel
 
-        hints = hints or {}
         if self._exec_backend_obj is None:
             self._exec_backend_obj = make_backend(
                 self.exec_backend, self.storage, self.scratch
@@ -758,20 +971,54 @@ class Runtime:
                 latency=self.exec_latency,
                 progress_threads=self.exec_progress_threads,
             )
-        executor = AsyncExecutor(
-            nworkers=self.nprocs,
-            storage=self.storage,
-            scratch=self.scratch,
-            backend=self._exec_backend_obj,
-            channel=self._exec_channel_obj,
-            batch_dispatch=bool(hints.get("batch_dispatch")),
-        )
-        try:
-            res = executor.run(self.deps)
-        finally:
-            executor.close()  # shared channel stays open (closed on exit)
-        self._ensure_exec_stats().merge(res)
-        return res
+        if self._exec_executor_obj is None:
+            self._exec_executor_obj = AsyncExecutor(
+                nworkers=self.nprocs,
+                storage=self.storage,
+                scratch=self.scratch,
+                backend=self._exec_backend_obj,
+                channel=self._exec_channel_obj,
+            )
+        return self._exec_executor_obj
+
+    # -- ticket bookkeeping -------------------------------------------------
+    def _sync_outstanding(self) -> None:
+        """Join every outstanding ``wait=False`` flush.  Drains are
+        serialized: a new flush (or a stats query) first waits for the
+        in-flight one, merging its stats."""
+        while self._tickets:
+            self._tickets[0].wait()
+
+    def _ticket_done(self, ticket: FlushTicket, res) -> None:
+        if res is not None:
+            self._ensure_exec_stats().merge(res)
+        if ticket in self._tickets:
+            self._tickets.remove(ticket)
+
+    def _ticket_failed(self, ticket: FlushTicket) -> None:
+        if ticket in self._tickets:
+            self._tickets.remove(ticket)
+        # the executor that failed mid-drain is not reusable; drop it so
+        # the next flush builds a fresh worker pool (channel + backend
+        # survive — jit caches and progress threads are unaffected)
+        ex = self._exec_executor_obj
+        self._exec_executor_obj = None
+        if ex is not None:
+            ex.close()
+
+    def _barrier_cleanup(self) -> None:
+        """Housekeeping that is only safe at a true barrier — nothing in
+        flight and nothing pending.  Scratch buffers, the transfer-dedup
+        cache, and combine-init state must survive partial flushes
+        (remainder operations still reference scratch delivered by an
+        earlier cone), so they are recycled only here; likewise block
+        storage of dead bases may still be read by pending operations."""
+        if self._tickets or self.deps.n_pending:
+            return
+        self.scratch.clear()
+        self._xfer_cache.clear()
+        self._combine_seen.clear()
+        self._purge_dead()
 
     def _ensure_exec_stats(self):
         if self.exec_stats is None:
@@ -798,7 +1045,13 @@ class Runtime:
         """Accumulated run statistics: the simulated
         :class:`TimelineResult`, or the measured
         :class:`repro.exec.WaitStats` when ``flush_backend="async"``
-        (both expose makespan / wait_fraction / speedup / summary())."""
+        (both expose makespan / wait_fraction / speedup / summary()).
+
+        Outstanding ``wait=False`` flushes are joined first, so the
+        returned object reflects *whole-program* totals — per-cone
+        WaitStats merge on ticket completion, never get dropped."""
         if self.flush_backend == "async":
+            if not self._closed:
+                self._sync_outstanding()
             return self._ensure_exec_stats()
         return self.result

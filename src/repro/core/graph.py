@@ -29,6 +29,7 @@ __all__ = [
     "DependencySystem",
     "FullDAG",
     "regions_overlap",
+    "producer_cone",
 ]
 
 _op_counter = itertools.count()
@@ -100,6 +101,66 @@ class OperationNode:
     def add_access(self, acc: AccessNode) -> None:
         acc.op = self
         self.accesses.append(acc)
+
+
+def producer_cone(
+    ops: list[OperationNode], targets: set
+) -> tuple[list[OperationNode], list[OperationNode]]:
+    """Split a program-ordered pending-operation list into the
+    *dependency cone* of ``targets`` and the untouched remainder.
+
+    ``targets`` holds base ids (ints — every block of that base) and/or
+    exact ``(base_id, block)`` access keys (a sub-view readback forces
+    only the blocks it touches).
+
+    The cone is the transitive predecessor closure — under the §5.7
+    conflict rule, at access-key granularity — of every pending **write**
+    to a targeted block: exactly the operations that must execute
+    before those blocks are readable.  The closure is computed by one
+    reverse walk that propagates two key sets:
+
+    * ``need_any``  — keys *written* by a marked operation: any earlier
+      access (read or write) to such a key conflicts, so its operation
+      joins the cone.  This also captures anti-dependencies: a pending
+      read of a target base recorded *before* a later write to it is
+      pulled in, so it observes the program-order value, not the
+      post-cone one.
+    * ``need_write`` — keys *read* by a marked operation: an earlier
+      write to such a key is the producer of the value read.
+
+    Both returned lists preserve program order, so draining the cone
+    first and the remainder later respects the total order of every
+    conflicting access pair: any conflict between a cone operation and a
+    remainder operation necessarily has the cone operation earlier —
+    otherwise the closure would have marked the remainder operation too.
+    Key granularity (regions ignored) over-approximates, which is sound:
+    at worst a few extra operations drain early.
+    """
+    marked = [False] * len(ops)
+    need_any: set[Hashable] = set()
+    need_write: set[Hashable] = set()
+    for i in range(len(ops) - 1, -1, -1):
+        op = ops[i]
+        hit = any(
+            acc.write and (acc.key[0] in targets or acc.key in targets)
+            for acc in op.accesses
+        )
+        if not hit:
+            for acc in op.accesses:
+                if acc.key in need_any or (acc.write and acc.key in need_write):
+                    hit = True
+                    break
+        if not hit:
+            continue
+        marked[i] = True
+        for acc in op.accesses:
+            if acc.write:
+                need_any.add(acc.key)
+            else:
+                need_write.add(acc.key)
+    cone = [op for i, op in enumerate(ops) if marked[i]]
+    rest = [op for i, op in enumerate(ops) if not marked[i]]
+    return cone, rest
 
 
 def _reset_for_reinsert(op: OperationNode) -> None:

@@ -24,7 +24,12 @@ aggregates tasks to amortize per-task Python overhead:
 Passes are string-keyed plugins (``repro.register_pass``) resolved
 through :mod:`repro.api.registry`, ordered by the pipeline on
 :class:`~repro.api.config.ExecutionPolicy` — they compose exactly like
-backends and channels do.
+backends and channels do.  Under demand-driven sync the pipeline runs
+on each extracted dependency cone, not the whole recorded graph: the
+runtime hands ``plan()`` the cone's dependency system and a
+``dead_bases`` set already restricted to bases no *remainder* operation
+still touches (a dead temp whose consumer stays pending is not dead for
+this flush).
 
 **Correctness contract** — a pass must preserve the relative program
 order of every pair of conflicting accesses it keeps.  The rewritten

@@ -5,9 +5,13 @@ The core runtime reproduces the paper's claim on a discrete-event
 simulator; this subsystem executes the *same* recorded dependency graphs
 with genuine concurrency so the waiting-time metric is measured:
 
-* :class:`AsyncExecutor` — per-process worker threads with comm-first
-  ready queues, sweep-based completion (batched per-worker handoffs
-  under the ``"batch"`` plan pass), structural deadlock detection.
+* :class:`AsyncExecutor` — a persistent pool of per-process worker
+  threads with comm-first ready queues, sweep-based completion (batched
+  per-worker handoffs under the ``"batch"`` plan pass), structural
+  deadlock detection.  ``submit(deps)`` starts a drain and returns a
+  :class:`Future` resolving to that drain's :class:`WaitStats` — the
+  non-blocking primitive behind ``Runtime.flush(wait=False)`` and the
+  demand-driven readback surface.
 * :mod:`~repro.exec.channels` — non-blocking transfer channel with a
   progress engine (scratch buffers delivered while compute runs) vs. the
   synchronous blocking channel baseline.

@@ -44,6 +44,7 @@ from repro.core.graph import COMM, DependencySystem, OperationNode
 from repro.core.scheduler import DeadlockError, format_stuck_ops
 
 from .channels import RendezvousDeadlock, RendezvousMailbox, make_channel
+from .futures import Future
 from .stats import WaitStats
 from .workers import Worker
 
@@ -396,7 +397,18 @@ def make_backend(name, storage: dict, scratch: dict) -> ComputeBackend:
 
 
 class AsyncExecutor:
-    """Drains a DependencySystem on worker threads + transfer channels.
+    """Drains DependencySystems on a persistent worker pool + transfer
+    channels.
+
+    The executor is *persistent*: :meth:`submit` hands it a recorded
+    graph (typically one dependency cone of a demand-driven flush) and
+    returns a :class:`~repro.exec.futures.Future` that resolves — from
+    the completing worker/progress thread — with that drain's
+    :class:`WaitStats` delta.  The submitting thread keeps running
+    (recording more operations) while the drain proceeds; drains are
+    serialized (one in flight at a time), and the worker threads park on
+    their empty queues between drains instead of being torn down.
+    :meth:`run` is the blocking convenience (``submit().result()``).
 
     With ``batch_dispatch=True`` (set by the ``"batch"`` plan pass) the
     completion sweep groups newly-ready compute ops per worker and
@@ -434,9 +446,15 @@ class AsyncExecutor:
         self._deps: Optional[DependencySystem] = None
         self._inflight = 0
         self._ready_batch: list[OperationNode] = []
-        self._finished = threading.Event()
+        self._drain_fut: Optional[Future] = None
+        self._prev_hook = None
+        self._t0 = 0.0
+        self._snap: Optional[dict] = None
         self._error: Optional[BaseException] = None
-        self._started = False
+        self._workers_started = False
+        self._closed = False
+        # lifetime totals; per-drain stats are deltas against a submit-time
+        # snapshot
         self.comm_bytes = 0
         self.n_comm_ops = 0
         self.n_compute_ops = 0
@@ -444,9 +462,7 @@ class AsyncExecutor:
 
     # -- error path ------------------------------------------------------
     def _record_error(self, exc: BaseException) -> None:
-        if self._error is None:
-            self._error = exc
-        self._finished.set()
+        self._finish_drain(exc)
 
     # -- transfer execution (runs on progress threads / workers) ----------
     def _exec_comm(self, op: OperationNode) -> None:
@@ -561,92 +577,160 @@ class AsyncExecutor:
             self._record_error(internal)
 
     def _ops_done_inner(self, ops) -> None:
-        deadlocked = False
+        finished = deadlocked = False
         with self._glock:
-            if self._deps is None:  # already torn down
+            if self._deps is None:  # drain already finalized
                 return
+            deps = self._deps
             self._inflight -= len(ops)
             for op in ops:
-                self._deps.complete(op)  # on_ready collects into _ready_batch
+                deps.complete(op)  # on_ready collects into _ready_batch
             newly, self._ready_batch = self._ready_batch, []
             self._inflight += len(newly)
             for nxt in newly:
                 self._count_op(nxt)
             if self._inflight == 0:
-                if self._deps.done:
-                    self._finished.set()
+                if deps.done:
+                    finished = True
                 else:
                     deadlocked = True
         self._dispatch_batch(newly)
-        if deadlocked:
-            self._record_error(self._deadlock_error())
-            self._finished.set()
+        if finished:
+            self._finish_drain()
+        elif deadlocked:
+            self._finish_drain(self._deadlock_error(deps))
 
-    def _deadlock_error(self) -> DeadlockError:
-        stuck = self._deps.pending_ops() if self._deps is not None else []
+    def _deadlock_error(self, deps: Optional[DependencySystem]) -> DeadlockError:
+        stuck = deps.pending_ops() if deps is not None else []
         return DeadlockError(
             f"async flush stalled: {len(stuck)} operations pending, none in "
             f"flight — dependency cycle or lost completion.\nstuck operation-nodes:\n"
             + format_stuck_ops(stuck)
         )
 
-    # -- main entry -------------------------------------------------------
-    def run(self, deps: DependencySystem) -> WaitStats:
-        """Drain ``deps``; returns the measured WaitStats for this flush."""
-        if self._started:
-            raise RuntimeError("AsyncExecutor.run is one-shot; build a new one")
-        self._started = True
-        self._deps = deps
-        prev_hook = deps.on_ready
-        # late-bound: _ops_done swaps _ready_batch for a fresh list per sweep
-        deps.on_ready = lambda op: self._ready_batch.append(op)
-        posted_before = getattr(self.channel, "n_posted", 0)
-        for w in self.workers:
-            w.start()
-        t0 = time.perf_counter()
-        try:
-            # initial drain: everything recorded ready before we attached
-            initial = []
-            with self._glock:
-                while True:
-                    op = deps.pop_ready()
-                    if op is None:
-                        break
-                    initial.append(op)
-                    self._count_op(op)
-                self._inflight += len(initial)
-                if not initial and not deps.done:
-                    raise self._deadlock_error()
-            self._dispatch_batch(initial)
-            if deps.n_pending > 0 or self._inflight > 0:
-                self._finished.wait()
-            if self._error is not None:
-                raise self._error
-        finally:
-            elapsed = time.perf_counter() - t0
-            with self._glock:
-                self._deps = None
-            deps.on_ready = prev_hook
-            for w in self.workers:
-                w.stop()
-            for w in self.workers:
-                w.join(timeout=5.0)
-        stats = WaitStats(
-            mode=self.mode,
-            nworkers=self.nworkers,
-            elapsed=elapsed,
-            procs=[w.stats for w in self.workers],
+    # -- per-drain accounting ---------------------------------------------
+    def _snapshot(self) -> dict:
+        return dict(
+            workers=[w.stats.snapshot() for w in self.workers],
             comm_bytes=self.comm_bytes,
             n_comm_ops=self.n_comm_ops,
             n_compute_ops=self.n_compute_ops,
-            seq_time=sum(w.stats.compute_busy for w in self.workers),
-            n_flushes=1,
             n_handoffs=self.n_handoffs,
-            n_messages=getattr(self.channel, "n_posted", 0) - posted_before,
+            n_posted=getattr(self.channel, "n_posted", 0),
         )
-        return stats
+
+    def _stats_since(self, snap: dict, elapsed: float) -> WaitStats:
+        procs = [w.stats.since(s) for w, s in zip(self.workers, snap["workers"])]
+        return WaitStats(
+            mode=self.mode,
+            nworkers=self.nworkers,
+            elapsed=elapsed,
+            procs=procs,
+            comm_bytes=self.comm_bytes - snap["comm_bytes"],
+            n_comm_ops=self.n_comm_ops - snap["n_comm_ops"],
+            n_compute_ops=self.n_compute_ops - snap["n_compute_ops"],
+            seq_time=sum(p.compute_busy for p in procs),
+            n_flushes=1,
+            n_handoffs=self.n_handoffs - snap["n_handoffs"],
+            n_messages=getattr(self.channel, "n_posted", 0) - snap["n_posted"],
+        )
+
+    def _finish_drain(self, exc: Optional[BaseException] = None) -> None:
+        """Finalize the active drain exactly once: detach the graph,
+        restore its hook, and resolve the drain future — with the
+        measured WaitStats delta, or with ``exc``.  Runs on whichever
+        thread completes (or kills) the last in-flight operation."""
+        with self._glock:
+            if self._drain_fut is None:  # no active drain (late error)
+                if exc is not None and self._error is None:
+                    self._error = exc
+                return
+            deps, self._deps = self._deps, None
+            fut, self._drain_fut = self._drain_fut, None
+            self._ready_batch = []
+            # a failed drain may leave the erroring op (and friends)
+            # uncounted; late completions of in-flight ops return early on
+            # _deps None without decrementing, so zero the counter here or
+            # the next drain on this executor could never reach 0
+            self._inflight = 0
+        if deps is not None:
+            deps.on_ready = self._prev_hook
+        elapsed = time.perf_counter() - self._t0
+        if exc is not None:
+            fut.set_exception(exc)
+        else:
+            fut.set_result(self._stats_since(self._snap, elapsed))
+
+    # -- main entry -------------------------------------------------------
+    def submit(self, deps: DependencySystem, batch_dispatch: Optional[bool] = None) -> Future:
+        """Start draining ``deps`` and return a Future resolving to the
+        drain's :class:`WaitStats` (or raising its failure).  Returns
+        immediately; the caller keeps the main thread.  One drain may be
+        in flight at a time — submit again only after the previous
+        future resolved."""
+        if self._closed:
+            raise RuntimeError("AsyncExecutor is closed")
+        if self._error is not None:
+            raise self._error
+        if self._drain_fut is not None:
+            raise RuntimeError(
+                "a drain is already in flight; wait on its future first"
+            )
+        if batch_dispatch is not None and batch_dispatch != self.batch_dispatch:
+            self.batch_dispatch = batch_dispatch
+            for w in self.workers:
+                w.set_batch(batch_dispatch)
+        fut = Future()
+        self._prev_hook = deps.on_ready
+        # late-bound: _ops_done swaps _ready_batch for a fresh list per sweep
+        deps.on_ready = lambda op: self._ready_batch.append(op)
+        self._snap = self._snapshot()
+        self._t0 = time.perf_counter()
+        with self._glock:
+            self._deps = deps
+            self._drain_fut = fut
+        if not self._workers_started:
+            self._workers_started = True
+            for w in self.workers:
+                w.start()
+        for w in self.workers:
+            w.drain_started()  # parked-between-drains time is not idle
+        # initial dispatch: everything recorded ready before we attached
+        initial = []
+        with self._glock:
+            while True:
+                op = deps.pop_ready()
+                if op is None:
+                    break
+                initial.append(op)
+                self._count_op(op)
+            self._inflight += len(initial)
+        if not initial:
+            if deps.done:
+                self._finish_drain()  # empty graph: resolve with empty delta
+            else:
+                self._finish_drain(self._deadlock_error(deps))
+            return fut
+        self._dispatch_batch(initial)
+        return fut
+
+    def run(self, deps: DependencySystem) -> WaitStats:
+        """Drain ``deps`` to completion; returns the measured WaitStats
+        for this flush (``submit`` + blocking wait).  The worker pool
+        persists across calls until :meth:`close`."""
+        return self.submit(deps).result()
 
     def close(self) -> None:
+        """Stop the worker pool and (if owned) the channel.  Idempotent —
+        a double close is a no-op."""
+        if self._closed:
+            return
+        self._closed = True
+        for w in self.workers:
+            w.stop()
+        if self._workers_started:
+            for w in self.workers:
+                w.join(timeout=5.0)
         if self._owns_channel:
             self.channel.close()
 

@@ -127,7 +127,10 @@ class AsyncChannel:
             fut.set_result(op)
 
     def close(self) -> None:
+        """Stop the progress threads; double-close is a no-op."""
         with self._cv:
+            if self._stopped:
+                return
             self._stopped = True
             self._cv.notify_all()
         for t in self._threads:

@@ -39,6 +39,29 @@ class WorkerStats:
         self.n_comm += other.n_comm
         self.n_wakeups += other.n_wakeups
 
+    def snapshot(self) -> "WorkerStats":
+        """Value copy, taken by the persistent executor at submit time so
+        each drain's stats are a delta, not the lifetime totals."""
+        return WorkerStats(
+            compute_busy=self.compute_busy,
+            comm_busy=self.comm_busy,
+            idle=self.idle,
+            n_compute=self.n_compute,
+            n_comm=self.n_comm,
+            n_wakeups=self.n_wakeups,
+        )
+
+    def since(self, base: "WorkerStats") -> "WorkerStats":
+        """Per-drain delta: current totals minus a ``snapshot()``."""
+        return WorkerStats(
+            compute_busy=self.compute_busy - base.compute_busy,
+            comm_busy=self.comm_busy - base.comm_busy,
+            idle=self.idle - base.idle,
+            n_compute=self.n_compute - base.n_compute,
+            n_comm=self.n_comm - base.n_comm,
+            n_wakeups=self.n_wakeups - base.n_wakeups,
+        )
+
 
 @dataclass
 class WaitStats:

@@ -64,6 +64,7 @@ class Worker(threading.Thread):
         self._cv = threading.Condition()
         self._queue: deque[OperationNode] = deque()
         self._stopped = False
+        self._idle_floor = 0.0  # drain start; earlier parked time not idle
         self.stats = WorkerStats()
 
     # -- producer side (executor dispatch) --------------------------------
@@ -76,6 +77,20 @@ class Worker(threading.Thread):
 
     def push(self, op: OperationNode) -> None:
         self.push_batch((op,))
+
+    def set_batch(self, batch: bool) -> None:
+        """Switch dispatch granularity between drains.  The persistent
+        executor calls this at submit time (no drain in flight, queue
+        empty), so the flag never changes under a live batch."""
+        with self._cv:
+            self._batch = batch
+
+    def drain_started(self) -> None:
+        """Mark the start of a new drain: time spent parked on an empty
+        queue *before* this point (the main thread recording between
+        drains) must not be accounted as dependency-wait idle time."""
+        with self._cv:
+            self._idle_floor = time.perf_counter()
 
     def stop(self) -> None:
         with self._cv:
@@ -97,7 +112,9 @@ class Worker(threading.Thread):
                     idle_from = time.perf_counter()
                 self._cv.wait()
             if idle_from is not None:
-                self.stats.idle += time.perf_counter() - idle_from
+                self.stats.idle += time.perf_counter() - max(
+                    idle_from, self._idle_floor
+                )
             self.stats.n_wakeups += 1
             if not self._batch:
                 for i, op in enumerate(self._queue):

@@ -1,0 +1,502 @@
+"""Demand-driven evaluation surface: dependency-cone extraction, partial
+non-blocking flushes (FlushTicket), the futures API
+(repro.evaluate/gather/wait), WaitStats accumulation across partial
+flushes, executor-resource lifecycle (Runtime.close), and the error
+surface of the redesigned API."""
+import numpy as np
+import pytest
+
+import repro
+from repro.api import ExecutionPolicy
+from repro.api.futures import ArrayFuture
+from repro.core.engine import FlushTicket
+from repro.core.graph import (
+    COMM,
+    COMPUTE,
+    AccessNode,
+    DependencySystem,
+    OperationNode,
+    producer_cone,
+)
+
+
+# ---------------------------------------------------------------------------
+# producer_cone — the graph-level closure
+# ---------------------------------------------------------------------------
+
+
+def _op(writes, reads=(), kind=COMPUTE, label=""):
+    op = OperationNode(kind, None, procs=(0,), label=label)
+    for key in writes:
+        op.add_access(AccessNode(key, None, write=True))
+    for key in reads:
+        op.add_access(AccessNode(key, None, write=False))
+    return op
+
+
+def test_cone_picks_only_the_producer_chain():
+    # two independent chains on bases 1 and 2
+    a1 = _op(writes=[(1, (0,))], label="w1a")
+    a2 = _op(writes=[(1, (0,))], reads=[(1, (0,))], label="w1b")
+    b1 = _op(writes=[(2, (0,))], label="w2a")
+    b2 = _op(writes=[(2, (0,))], reads=[(2, (0,))], label="w2b")
+    ops = [a1, b1, a2, b2]
+    cone, rest = producer_cone(ops, {1})
+    assert cone == [a1, a2]
+    assert rest == [b1, b2]
+
+
+def test_cone_transitive_through_scratch():
+    # transfer writes scratch, consumer of base 2 reads it; base 2's cone
+    # must pull the transfer AND the producer of the transferred block
+    src = _op(writes=[(1, (0,))], label="produce-src")
+    xfer = _op(writes=[("s", 7)], reads=[(1, (0,))], kind=COMM, label="xfer")
+    cons = _op(writes=[(2, (0,))], reads=[("s", 7)], label="consume")
+    other = _op(writes=[(3, (0,))], label="other")
+    cone, rest = producer_cone([src, xfer, other, cons], {2})
+    assert cone == [src, xfer, cons]
+    assert rest == [other]
+
+
+def test_cone_respects_anti_dependencies():
+    # read of base 1 recorded BETWEEN two writes must drain with the
+    # cone, or it would observe the post-cone value
+    w1 = _op(writes=[(1, (0,))], label="w1")
+    r = _op(writes=[(9, (0,))], reads=[(1, (0,))], label="reader")
+    w2 = _op(writes=[(1, (0,))], label="w2")
+    cone, rest = producer_cone([w1, r, w2], {1})
+    assert cone == [w1, r, w2]
+    assert rest == []
+
+
+def test_cone_leaves_late_readers_behind():
+    # a read recorded AFTER the last pending write of the target stays
+    # pending: draining the cone first cannot change what it reads
+    w1 = _op(writes=[(1, (0,))], label="w1")
+    late = _op(writes=[(9, (0,))], reads=[(1, (0,))], label="late-reader")
+    cone, rest = producer_cone([w1, late], {1})
+    assert cone == [w1]
+    assert rest == [late]
+
+
+def test_cone_rebuild_roundtrip_executes_both_halves():
+    with repro.runtime(nprocs=4, block_size=4, sync="demand") as rt:
+        x = repro.ones((8, 8))
+        y = repro.ones((8, 8))
+        x2 = x * 2.0
+        y2 = y * 3.0
+        total = rt.deps.n_pending
+        vx = np.asarray(x2)  # cone flush: only x2's producers
+        assert 0 < rt.deps.n_pending < total
+        vy = np.asarray(y2)
+        assert rt.deps.n_pending == 0
+    np.testing.assert_array_equal(vx, np.full((8, 8), 2.0))
+    np.testing.assert_array_equal(vy, np.full((8, 8), 3.0))
+
+
+# ---------------------------------------------------------------------------
+# partial + non-blocking flush (FlushTicket)
+# ---------------------------------------------------------------------------
+
+
+def test_flush_targets_drains_partial_graph_sim():
+    with repro.runtime(nprocs=2, block_size=4) as rt:
+        a = repro.ones((8,)) + 1.0
+        b = repro.ones((8,)) * 5.0
+        res = rt.flush(targets=(a,))
+        assert res is not None
+        assert rt.deps.n_pending > 0  # b's ops untouched
+        np.testing.assert_array_equal(np.asarray(b), np.full((8,), 5.0))
+
+
+def test_flush_nowait_returns_ticket_without_joining():
+    with repro.runtime(nprocs=2, block_size=8, flush="async") as rt:
+        a = repro.ones((16,))
+        for _ in range(64):
+            a += 1.0
+        t = rt.flush(wait=False)
+        assert isinstance(t, FlushTicket)
+        # recording continues while the drain is (possibly) in flight
+        a += 1.0
+        st = t.wait()
+        assert st.n_compute_ops > 0
+        assert t.wait() is st  # idempotent
+        np.testing.assert_array_equal(np.asarray(a), np.full((16,), 66.0))
+
+
+def test_flush_nowait_empty_graph_gives_completed_ticket():
+    with repro.runtime(nprocs=2, block_size=8, flush="async") as rt:
+        t = rt.flush(wait=False)
+        assert isinstance(t, FlushTicket) and t.done()
+        assert t.wait() is None
+
+
+def test_sim_backend_ticket_comes_back_completed():
+    with repro.runtime(nprocs=2, block_size=8) as rt:
+        a = repro.ones((8,)) + 1.0
+        t = rt.flush(wait=False)
+        assert t.done()
+        assert t.wait() is not None
+        np.testing.assert_array_equal(np.asarray(a), np.full((8,), 2.0))
+
+
+def test_readback_forces_only_its_cone_async():
+    with repro.runtime(nprocs=4, block_size=64, flush="async") as rt:
+        arrs = [repro.ones((64,)) for _ in range(8)]
+        for _ in range(10):
+            for x in arrs:
+                x += 1.0
+        recorded = rt.deps.n_pending
+        np.asarray(arrs[0])
+        drained = rt.exec_stats.n_compute_ops + rt.exec_stats.n_comm_ops
+        assert drained < recorded / 4  # one chain out of eight
+        for x in arrs:
+            np.testing.assert_array_equal(np.asarray(x), np.full((64,), 11.0))
+
+
+def test_subview_readback_forces_only_touched_blocks():
+    # one base, 4 blocks, independent per-block chains: reading a
+    # sub-view must drain only the blocks that view touches
+    with repro.runtime(nprocs=4, block_size=16, flush="async") as rt:
+        a = repro.ones((64,))
+        for _ in range(8):
+            a += 1.0  # per-block fragments: 4 independent chains
+        recorded = rt.deps.n_pending
+        v = np.asarray(a[0:16])  # exactly one block
+        drained = rt.exec_stats.n_compute_ops + rt.exec_stats.n_comm_ops
+        assert drained <= recorded // 4
+        assert rt.deps.n_pending == recorded - drained
+        np.testing.assert_array_equal(v, np.full((16,), 9.0))
+        np.testing.assert_array_equal(np.asarray(a), np.full((64,), 9.0))
+
+
+def test_barrier_sync_preserves_whole_graph_flush():
+    with repro.runtime(
+        nprocs=4, block_size=64, flush="async", sync="barrier"
+    ) as rt:
+        arrs = [repro.ones((64,)) for _ in range(4)]
+        for _ in range(5):
+            for x in arrs:
+                x += 1.0
+        recorded = rt.deps.n_pending
+        np.asarray(arrs[0])
+        assert rt.deps.n_pending == 0  # everything drained at once
+        drained = rt.exec_stats.n_compute_ops + rt.exec_stats.n_comm_ops
+        assert drained == recorded
+
+
+def test_demand_bit_identical_to_barrier():
+    def run(sync, order):
+        with repro.runtime(
+            nprocs=4, block_size=8, flush="async", sync=sync
+        ) as rt:
+            a = repro.ones((16, 16))
+            b = a * 2.0 + 1.0
+            c = np.sqrt(a + 3.0)
+            d = (b + c).sum(axis=0)
+            outs = [b, c, d]
+            got = [None] * 3
+            for i in order:
+                got[i] = np.asarray(outs[i]).copy()
+            return got
+
+    ref = run("barrier", [0, 1, 2])
+    for order in ([2, 0, 1], [1, 2, 0], [0, 2, 1]):
+        got = run("demand", order)
+        for r, g in zip(ref, got):
+            np.testing.assert_array_equal(r, g)
+
+
+# ---------------------------------------------------------------------------
+# futures surface: evaluate / gather / wait
+# ---------------------------------------------------------------------------
+
+
+def test_evaluate_returns_future_and_result_gathers():
+    with repro.runtime(nprocs=2, block_size=8, flush="async"):
+        a = repro.ones((16,)) * 4.0
+        fut = repro.evaluate(a)
+        assert isinstance(fut, ArrayFuture)
+        assert fut.shape == (16,) and fut.dtype == np.float64
+        out = fut.result()
+        np.testing.assert_array_equal(out, np.full((16,), 4.0))
+        assert fut.done()
+
+
+def test_evaluate_many_shares_one_ticket():
+    with repro.runtime(nprocs=2, block_size=8, flush="async"):
+        a = repro.ones((16,)) + 1.0
+        b = repro.ones((16,)) + 2.0
+        fa, fb = repro.evaluate(a, b)
+        assert fa._ticket is fb._ticket
+        np.testing.assert_array_equal(fa.result(), np.full((16,), 2.0))
+        np.testing.assert_array_equal(fb.result(), np.full((16,), 3.0))
+
+
+def test_evaluate_does_not_drain_unrelated_work():
+    with repro.runtime(nprocs=2, block_size=8, flush="async") as rt:
+        a = repro.ones((16,)) + 1.0
+        b = repro.ones((16,)) * 9.0
+        fut = repro.evaluate(a)
+        fut.block_until_ready()
+        assert rt.deps.n_pending > 0  # b still lazy
+        np.testing.assert_array_equal(np.asarray(b), np.full((16,), 9.0))
+
+
+def test_block_until_ready_method():
+    with repro.runtime(nprocs=2, block_size=8, flush="async") as rt:
+        a = repro.ones((16,)) + 6.0
+        same = a.block_until_ready()
+        assert same is a
+        # the cone drained: a's value is materialized in block storage
+        assert rt.deps.n_pending == 0
+        np.testing.assert_array_equal(np.asarray(a), np.full((16,), 7.0))
+
+
+def test_wait_accepts_arrays_and_futures():
+    with repro.runtime(nprocs=2, block_size=8, flush="async"):
+        a = repro.ones((16,)) + 1.0
+        b = repro.ones((16,)) + 2.0
+        fut = repro.evaluate(b)
+        ra, rfut = repro.wait(a, fut)
+        assert ra is a and rfut is fut
+        np.testing.assert_array_equal(repro.gather(ra), np.full((16,), 2.0))
+        np.testing.assert_array_equal(repro.gather(rfut), np.full((16,), 3.0))
+
+
+def test_gather_on_expr_and_ndarray():
+    host = np.arange(4.0)
+    assert repro.gather(host) is host
+    with repro.runtime(nprocs=2, block_size=4, fusion=True):
+        a = repro.ones((8,))
+        expr = a * 2.0 + 1.0  # Expr under fusion=True
+        np.testing.assert_array_equal(repro.gather(expr), np.full((8,), 3.0))
+
+
+def test_np_asarray_on_future():
+    with repro.runtime(nprocs=2, block_size=8, flush="async"):
+        a = repro.ones((8,)) * 5.0
+        fut = repro.evaluate(a)
+        np.testing.assert_array_equal(np.asarray(fut), np.full((8,), 5.0))
+
+
+# ---------------------------------------------------------------------------
+# WaitStats accumulation across partial flushes (regression: whole-program
+# wait%, not last-cone wait%)
+# ---------------------------------------------------------------------------
+
+
+def _disjoint_cone_program(rt):
+    """Two disjoint cones, each with cross-owner transfers (shifted-slice
+    products force neighbour communication)."""
+    x = repro.ones((64,))
+    y = repro.ones((64,))
+    xs = x[0:63] * x[1:64]
+    ys = y[0:63] + y[1:64]
+    return xs, ys
+
+
+def test_waitstats_merge_across_two_disjoint_cones():
+    with repro.runtime(nprocs=4, block_size=16, flush="async") as rt:
+        xs, ys = _disjoint_cone_program(rt)
+        np.asarray(xs)  # cone 1
+        st1 = rt.stats()
+        ops1 = st1.n_compute_ops + st1.n_comm_ops
+        msgs1 = st1.n_messages
+        hand1 = st1.n_handoffs
+        assert st1.n_flushes == 1 and ops1 > 0 and msgs1 > 0
+        np.asarray(ys)  # cone 2 (disjoint)
+        st2 = rt.stats()
+        assert st2 is st1  # one accumulating object
+        assert st2.n_flushes == 2
+        assert st2.n_compute_ops + st2.n_comm_ops > ops1
+        assert st2.n_messages > msgs1  # PR-3 counters keep accumulating
+        assert st2.n_handoffs >= hand1
+        # whole-program: elapsed is the sum of both drains, and the wait
+        # fraction is computed against it (not the last cone's)
+        assert st2.elapsed > st1.elapsed or st1.elapsed == st2.elapsed
+        assert 0.0 <= st2.wait_fraction <= 1.0
+
+
+def test_stats_joins_outstanding_nonblocking_flush():
+    with repro.runtime(nprocs=2, block_size=8, flush="async") as rt:
+        a = repro.ones((16,))
+        for _ in range(32):
+            a += 1.0
+        rt.flush(wait=False)
+        st = rt.stats()  # must include the in-flight drain
+        assert st.n_compute_ops >= 32
+        assert not rt._tickets
+
+
+def test_format_stats_renders_merged_demand_stats():
+    with repro.runtime(nprocs=2, block_size=16, flush="async") as rt:
+        a = repro.ones((32,)) + 1.0
+        b = repro.ones((32,)) + 2.0
+        np.asarray(a)
+        np.asarray(b)
+        out = repro.format_stats([("demand", rt.stats())])
+    assert "measured" in out and "ops/flush" in out
+
+
+# ---------------------------------------------------------------------------
+# executor-resource lifecycle (Runtime.close)
+# ---------------------------------------------------------------------------
+
+
+def test_close_shuts_down_executor_and_channel():
+    rt = repro.runtime(nprocs=2, block_size=8, flush="async")
+    with rt:
+        a = repro.ones((16,))
+        np.asarray(a + 1.0)
+        executor = rt._exec_executor_obj
+        channel = rt._exec_channel_obj
+        assert executor is not None and channel is not None
+        assert any(w.is_alive() for w in executor.workers)
+    # __exit__ (clean path) closed everything
+    assert rt._exec_executor_obj is None and rt._exec_channel_obj is None
+    assert not any(w.is_alive() for w in executor.workers)
+    assert all(not t.is_alive() for t in getattr(channel, "_threads", []))
+
+
+def test_close_on_exception_path_and_double_close():
+    rt = repro.runtime(nprocs=2, block_size=8, flush="async")
+    with pytest.raises(ValueError, match="boom"):
+        with rt:
+            a = repro.ones((16,))
+            np.asarray(a + 1.0)
+            executor = rt._exec_executor_obj
+            raise ValueError("boom")
+    assert rt._exec_executor_obj is None  # closed despite the exception
+    assert not any(w.is_alive() for w in executor.workers)
+    rt.close()  # double close is a no-op
+    rt.close()
+
+
+def test_flush_after_close_raises():
+    rt = repro.runtime(nprocs=2, block_size=8, flush="async")
+    with rt:
+        np.asarray(repro.ones((8,)) + 1.0)
+    with pytest.raises(RuntimeError, match="closed"):
+        rt.flush()
+
+
+def test_executor_reusable_after_failed_drain():
+    """A drain that errors must not wedge the persistent executor: the
+    in-flight accounting resets, so a later submit still completes."""
+    from repro.exec import AsyncExecutor
+
+    class Boom:
+        pass
+
+    deps = DependencySystem()
+    bad = OperationNode(COMPUTE, Boom(), procs=(0,), label="bad")
+    bad.add_access(AccessNode((1, (0,)), None, write=True))
+    deps.insert(bad)
+    ex = AsyncExecutor(nworkers=2, storage={}, scratch={})
+    try:
+        with pytest.raises(TypeError, match="unknown payload"):
+            ex.submit(deps).result(timeout=10.0)
+        assert ex._inflight == 0
+    finally:
+        ex.close()
+
+
+def test_worker_idle_excludes_time_parked_between_drains():
+    import time
+
+    with repro.runtime(nprocs=2, block_size=8, flush="async") as rt:
+        a = repro.ones((16,)) + 1.0
+        np.asarray(a)  # drain 1
+        time.sleep(0.5)  # main thread "records" for a while
+        b = repro.ones((16,)) + 2.0
+        np.asarray(b)  # drain 2
+        st = rt.stats()
+        # the 0.5 s gap must not be attributed to dependency-wait idle
+        assert sum(p.idle for p in st.procs) < 0.25
+
+
+def test_evaluate_rewraps_future_with_fresh_ticket():
+    with repro.runtime(nprocs=2, block_size=8, flush="async"):
+        a = repro.ones((16,))
+        a += 1.0
+        f1 = repro.evaluate(a)
+        f1.block_until_ready()
+        a += 5.0
+        f2 = repro.evaluate(f1)
+        assert f2 is not f1  # covers the drain this call submitted
+        assert f2._ticket is not f1._ticket
+        np.testing.assert_array_equal(f2.result(), np.full((16,), 7.0))
+
+
+# ---------------------------------------------------------------------------
+# error surface of the redesigned API
+# ---------------------------------------------------------------------------
+
+
+def test_gather_outside_runtime_raises():
+    with pytest.raises(RuntimeError, match="no active repro.core Runtime"):
+        repro.gather(object())
+
+
+def test_evaluate_outside_runtime_raises():
+    with pytest.raises(RuntimeError, match="no active repro.core Runtime"):
+        repro.evaluate(object())
+
+
+def test_evaluate_without_arguments_raises():
+    with repro.runtime(nprocs=2, block_size=8):
+        with pytest.raises(TypeError, match="at least one"):
+            repro.evaluate()
+        with pytest.raises(TypeError, match="at least one"):
+            repro.wait()
+
+
+def test_evaluate_rejects_non_arrays():
+    with repro.runtime(nprocs=2, block_size=8):
+        with pytest.raises(TypeError, match="DistArrays, Exprs or ArrayFutures"):
+            repro.evaluate(3.14)
+
+
+def test_result_after_base_garbage_collected_raises_clearly():
+    with repro.runtime(nprocs=2, block_size=8, flush="async") as rt:
+        a = repro.ones((16,)) + 1.0
+        fut = repro.evaluate(a)
+        fut.block_until_ready()
+        # simulate the base dying (the future normally keeps it alive):
+        # mark it dead and run the barrier purge
+        rt._dead_bases.add(a._base.id)
+        rt._barrier_cleanup()
+        with pytest.raises(RuntimeError, match="garbage-collected"):
+            fut.result()
+
+
+def test_nested_runtime_rejected():
+    with repro.runtime(nprocs=2, block_size=8):
+        with pytest.raises(RuntimeError, match="nested Runtimes"):
+            with repro.Runtime(nprocs=2):
+                pass  # pragma: no cover
+
+
+def test_policy_pass_typo_fails_at_construction_with_names():
+    with pytest.raises(ValueError) as ei:
+        ExecutionPolicy(passes=["coalesce", "fuze"])
+    msg = str(ei.value)
+    assert "fuze" in msg
+    for name in ("batch", "coalesce", "fuse"):
+        assert name in msg  # the available-names list
+
+
+def test_policy_sync_validated_and_resolved():
+    with pytest.raises(ValueError, match="auto\\|demand\\|barrier"):
+        ExecutionPolicy(sync="sometimes")
+    assert ExecutionPolicy().resolved_sync == "barrier"  # sim default
+    assert ExecutionPolicy(flush="async").resolved_sync == "demand"
+    assert ExecutionPolicy(flush="async", sync="barrier").resolved_sync == "barrier"
+    assert ExecutionPolicy(sync="demand").resolved_sync == "demand"
+
+
+def test_flush_targets_rejects_garbage():
+    with repro.runtime(nprocs=2, block_size=8) as rt:
+        with pytest.raises(TypeError, match="expected a DistArray"):
+            rt.flush(targets=("nope",))

@@ -5,7 +5,16 @@ stay bit-identical to the unplanned simulator on random programs.
 Random programs mix fills, strided slice writes, elementwise maps with
 cross-block transfers, in-place updates, and reductions over dead
 temporaries — the exact shapes the coalesce/fuse rewrites target.
+
+The demand-driven readback surface adds a second axis: under
+``sync="demand"`` every readback extracts and drains only the
+dependency cone of its base, so the *forcing order* of multiple cones
+partitions the recorded graph differently on every run.  The second
+property below randomizes that order and checks every pass pipeline ×
+sync mode combination against the unplanned barrier simulator.
 """
+import random
+
 import numpy as np
 import pytest
 
@@ -38,10 +47,10 @@ _BINOPS = {
 }
 
 
-def _run(prog, passes):
+def _run(prog, passes, sync="auto", force_seed=None):
     from repro.core import darray as dnp
 
-    with repro.runtime(nprocs=4, block_size=3, passes=passes):
+    with repro.runtime(nprocs=4, block_size=3, passes=passes, sync=sync):
         arrs = [
             dnp.array(np.arange(48.0).reshape(SHAPE) * (i + 1) - 20.0)
             for i in range(N_ARRAYS)
@@ -76,9 +85,17 @@ def _run(prog, passes):
             elif kind == "reduce":
                 _, a, ax = step
                 outs.append(arrs[a % len(arrs)].sum(axis=ax))
-        return [np.asarray(a).copy() for a in arrs] + [
-            np.asarray(o).copy() for o in outs
-        ]
+        everything = list(arrs) + list(outs)
+        results = [None] * len(everything)
+        order = list(range(len(everything)))
+        if force_seed is not None:
+            # randomized forcing order: each readback extracts + drains
+            # one dependency cone; the cones partition the graph
+            # differently for every permutation
+            random.Random(force_seed).shuffle(order)
+        for i in order:
+            results[i] = np.asarray(everything[i]).copy()
+        return results
 
 
 @settings(max_examples=20, deadline=None)
@@ -90,3 +107,20 @@ def test_passes_bit_identical_to_unplanned_simulator(prog):
         assert len(got) == len(baseline)
         for ref, out in zip(baseline, got):
             np.testing.assert_array_equal(ref, out, err_msg=f"{pipeline}")
+
+
+@settings(max_examples=15, deadline=None)
+@given(prog=programs, seed=st.integers(0, 2**16))
+def test_demand_cone_forcing_order_bit_identical(prog, seed):
+    """Acceptance gate: every pass pipeline × sync mode combination is
+    bit-identical to the unplanned barrier simulator, with the cones
+    forced in a random order under sync="demand"."""
+    baseline = _run(prog, passes=())
+    for pipeline in ((), ("coalesce",), ("fuse",), ("coalesce", "fuse")):
+        for sync in ("barrier", "demand"):
+            got = _run(prog, passes=pipeline, sync=sync, force_seed=seed)
+            assert len(got) == len(baseline)
+            for ref, out in zip(baseline, got):
+                np.testing.assert_array_equal(
+                    ref, out, err_msg=f"passes={pipeline} sync={sync}"
+                )
