@@ -23,11 +23,20 @@ operations (its dependency cone — one chain), and forcing the remaining
 arrays must produce results bit-identical to the same program under
 ``sync="barrier"``.
 
+``--trace-overhead`` runs the tracing acceptance gates instead (CI job
+``trace-smoke``): the same ~``--ops``-operation chain is timed with
+tracing disabled and with a live collector.  Traced overhead must stay
+below ``--max-overhead`` (default 5%), results must be bit-identical,
+and the exported Chrome-trace JSON must validate.  (The <1% *disabled*
+gate is implicit: the untraced leg here IS the disabled path, and the
+tier-1 suite plus the default gates run it at full speed.)
+
 Exits non-zero (assertion) on any regression.
 """
 from __future__ import annotations
 
 import argparse
+import time
 
 import numpy as np
 
@@ -104,6 +113,62 @@ def run_demand_gate(ops: int) -> None:
     print("overlap smoke: OK")
 
 
+def run_trace_overhead_gate(ops: int, max_overhead: float) -> None:
+    """Tracing overhead gate: best-of-3 wall-clock of the ~``ops``-op
+    chain, traced (live ring-buffer collector) vs untraced, must differ
+    by < ``max_overhead``; traced results stay bit-identical and the
+    export validates."""
+    from repro.obs import attribution, export_trace, trace, validate_trace
+
+    print(f"== tracing overhead: ~{ops}-op elementwise chain ==")
+
+    def timed(fn):
+        t0 = time.perf_counter()
+        result = fn()
+        return time.perf_counter() - t0, result
+
+    def traced_run():
+        with trace() as tr:
+            st, r = chain_handoffs(ops, passes=("batch",))
+        return st, r, tr
+
+    # warm-up (thread pools, import costs) outside the timed region
+    chain_handoffs(max(100, ops // 100), passes=("batch",))
+
+    # alternate the two legs so machine drift hits both equally, then
+    # compare best against best (the least-noise estimate of true cost)
+    offs, ons = [], []
+    for _ in range(3):
+        t, (st_off, r_off) = timed(
+            lambda: chain_handoffs(ops, passes=("batch",))
+        )
+        offs.append(t)
+        t, (st_on, r_on, tr) = timed(traced_run)
+        ons.append(t)
+
+    t_off, t_on = min(offs), min(ons)
+    overhead = t_on / t_off - 1.0
+    print(f"  untraced: {t_off * 1e3:8.1f} ms  ({st_off.ops_per_sec:,.0f} ops/s)")
+    print(f"  traced:   {t_on * 1e3:8.1f} ms  ({st_on.ops_per_sec:,.0f} ops/s, "
+          f"{tr.n_emitted} events, {tr.dropped} dropped)")
+    print(f"  overhead: {overhead * 100:+.2f}% (gate < {max_overhead * 100:.0f}%)")
+    assert np.array_equal(r_off, r_on), "tracing changed the numerical result!"
+    assert tr.n_emitted > ops, (
+        f"traced run emitted only {tr.n_emitted} events for ~{ops} ops"
+    )
+    doc = export_trace(tr)
+    info = validate_trace(doc)
+    print(f"  export: {info['n_events']} trace events validate "
+          f"(pids {info['pids']})")
+    rep = attribution(tr)
+    print("  " + rep.format(3).replace("\n", "\n  "))
+    assert overhead < max_overhead, (
+        f"tracing overhead {overhead * 100:.2f}% exceeds the "
+        f"{max_overhead * 100:.0f}% gate"
+    )
+    print("trace-overhead smoke: OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ops", type=int, default=10_000,
@@ -113,10 +178,18 @@ def main() -> None:
     ap.add_argument("--demand", action="store_true",
                     help="run the demand-driven overlap gate instead "
                          "(CI job overlap-smoke)")
+    ap.add_argument("--trace-overhead", action="store_true",
+                    help="run the tracing overhead gate instead "
+                         "(CI job trace-smoke)")
+    ap.add_argument("--max-overhead", type=float, default=0.05,
+                    help="allowed traced/untraced slowdown (fraction)")
     args = ap.parse_args()
 
     if args.demand:
         run_demand_gate(args.ops)
+        return
+    if args.trace_overhead:
+        run_trace_overhead_gate(args.ops, args.max_overhead)
         return
 
     print(f"== batched dispatch: ~{args.ops}-op elementwise chain ==")

@@ -82,6 +82,44 @@ def perf_rows(tag_pairs):
                   f"{fmt_s(opt['t_collective'])} | {opt['dominant']} | -{100*delta:.0f}% |")
 
 
+def overlap_table():
+    """Render the measured-overlap artifacts (``results/BENCH_*.json``
+    from ``benchmarks.run``): one row per swept variant, then — when the
+    run was traced (REPRO_TRACE=1) — the wait-attribution top-K naming
+    where the waiting actually went."""
+    files = sorted(Path("results").glob("BENCH_*.json"))
+    if not files:
+        print("  (no BENCH_*.json artifacts — run `python -m benchmarks.run` first)")
+        return
+    for f in files:
+        r = json.loads(f.read_text())
+        print(f"**{r.get('section', f.stem)}** — backend={r.get('backend')}, "
+              f"nprocs={r.get('nprocs')}, α={r.get('latency_s', 0) * 1e3:.0f} ms, "
+              f"overlap win {r.get('overlap_win', 0):.2f}×\n")
+        print("| variant | source | makespan ms | wait% | speedup | comm MB |")
+        print("|---|---|---|---|---|---|")
+        for label, row in r.get("rows", {}).items():
+            print(f"| {label} | {row['source']} | {row['makespan_s'] * 1e3:.1f} | "
+                  f"{row['wait_fraction'] * 100:.1f}% | {row['speedup']:.2f} | "
+                  f"{row['comm_bytes'] / 1e6:.2f} |")
+        att = r.get("attribution")
+        if not att:
+            print("\n(untraced run — re-run with REPRO_TRACE=1 for wait attribution)\n")
+            continue
+        print(f"\nWait attribution ({att['nworkers']} workers, "
+              f"{att['elapsed_s'] * 1e3:.1f} ms traced drain, trace wait "
+              f"{att['wait_fraction'] * 100:.1f}% vs measured "
+              f"{att['measured_wait_fraction'] * 100:.1f}%):\n")
+        print("| # | wait source | wait ms | spans | msgs | mean post→deliver |")
+        print("|---|---|---|---|---|---|")
+        for i, off in enumerate(att.get("top", []), 1):
+            lat = off.get("msg_latency")
+            print(f"| {i} | {off['group']} | {off['seconds'] * 1e3:.2f} | "
+                  f"{off['n_spans']} | {off.get('n_msgs') or '—'} | "
+                  f"{f'{lat * 1e3:.2f} ms' if lat else '—'} |")
+        print()
+
+
 if __name__ == "__main__":
     import sys
 
@@ -93,6 +131,10 @@ if __name__ == "__main__":
     if which in ("all", "roofline"):
         print("### Roofline (corrected cost probes, single-pod)\n")
         roofline_table()
+        print()
+    if which in ("all", "overlap"):
+        print("### Measured overlap & wait attribution\n")
+        overlap_table()
         print()
     if which in ("all", "perf"):
         print("### Perf iterations\n")

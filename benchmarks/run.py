@@ -17,6 +17,7 @@ from __future__ import annotations
 
 import argparse
 import json
+import os
 import sys
 from pathlib import Path
 
@@ -198,14 +199,17 @@ def run_real_overlap(fast: bool, backend: str = "numpy", passes: str = "auto"):
     assert np.array_equal(np.asarray(r_on), np.asarray(r_fu)), \
         "record-time fusion changed the numerical result!"
 
-    print(format_stats([
+    rows = [
         ("overlap ON  (async)", st_on),
         ("overlap OFF (blocking)", st_off),
         ("passes off", st_np),
         ("LH + fusion (§7)", st_fu),
         ("latency-hiding (model)", st_sim_lh),
         ("blocking (model)", st_sim_bl),
-    ]))
+    ]
+    # per_worker=True appends the per-rank compute/comm-wait/idle
+    # breakdown under each measured row (simulated rows have no workers)
+    print(format_stats(rows, per_worker=True))
     print(f"\n  wall-clock win from overlap: {st_off.makespan/st_on.makespan:.2f}x "
           f"(paper fig. 18, simulated: "
           f"{st_sim_bl.makespan/st_sim_lh.makespan:.2f}x)")
@@ -215,6 +219,49 @@ def run_real_overlap(fast: bool, backend: str = "numpy", passes: str = "auto"):
               f"({st_np.n_handoffs/st_on.n_handoffs:.1f}x fewer), "
               f"messages {st_np.n_messages} -> {st_on.n_messages} "
               f"({st_np.n_messages/max(1, st_on.n_messages):.1f}x fewer)")
+
+    # persist the section as a machine-readable artifact for
+    # benchmarks.make_report; under REPRO_TRACE the measured config is
+    # re-run traced, the Perfetto JSON exported next to it and the
+    # wait-attribution top-K folded into the artifact
+    def _stat_row(st):
+        return dict(
+            source="measured" if hasattr(st, "per_worker_table") else "simulated",
+            makespan_s=st.makespan, wait_fraction=st.wait_fraction,
+            speedup=st.speedup, comm_bytes=st.comm_bytes,
+            n_compute_ops=st.n_compute_ops, n_comm_ops=st.n_comm_ops,
+        )
+
+    bench = dict(
+        section="real_overlap", backend=backend, passes=passes,
+        nprocs=nprocs, latency_s=latency,
+        overlap_win=st_off.makespan / st_on.makespan,
+        rows={label: _stat_row(st) for label, st in rows},
+    )
+    Path("results").mkdir(exist_ok=True)
+    trace_env = os.environ.get("REPRO_TRACE", "")
+    if trace_env not in ("", "0", "false", "False"):
+        import repro
+        from repro.obs import attribution, export_trace
+
+        with repro.trace() as tr:
+            st_tr, _ = run_app("jacobi_stencil", nprocs=nprocs,
+                               policy=measured, **kw)
+        export_trace(tr, "results/trace_real_overlap.json")
+        rep = attribution(tr)
+        print("\n" + rep.format(5))
+        print("  trace -> results/trace_real_overlap.json "
+              "(open in https://ui.perfetto.dev)")
+        bench["attribution"] = dict(
+            nworkers=rep.nworkers, elapsed_s=rep.elapsed,
+            wait_fraction=rep.wait_fraction,
+            measured_wait_fraction=st_tr.wait_fraction,
+            barrier_wait_s=rep.barrier_wait, n_spans=rep.n_spans,
+            top=rep.top(5),
+        )
+    Path("results/BENCH_real_overlap.json").write_text(
+        json.dumps(bench, indent=1)
+    )
     return dict(wait_on=st_on.wait_fraction, wait_off=st_off.wait_fraction)
 
 

@@ -41,3 +41,11 @@ np.testing.assert_allclose(result, oracle, rtol=1e-10)
 print(f"matches NumPy oracle ✓ (sync={SYNC!r})")
 print(repro.format_stats([("quickstart", stats)]))
 print(f"waiting-on-comm share: {stats.wait_fraction * 100:.1f}%")
+
+# REPRO_TRACE=1 makes the runtime collect lifecycle events (the env var
+# is read by Runtime itself); export them for https://ui.perfetto.dev
+if rt.tracer is not None and rt.trace_path is None:
+    from repro.obs import export_trace
+
+    export_trace(rt.tracer, "quickstart_trace.json")
+    print(f"trace: {rt.tracer.n_emitted} events -> quickstart_trace.json")

@@ -132,6 +132,47 @@ print(f"\nplan-stage dispatch win (passes='auto' vs none, bit-identical): "
       f"handoffs {st_nop.n_handoffs} -> {st_plan.n_handoffs}, "
       f"messages {st_nop.n_messages} -> {st_plan.n_messages}")
 
+# --- traced run: Perfetto export + wait attribution ----------------------
+# REPRO_TRACE=1 re-runs the flagship measured config under a live
+# collector, exports Chrome-trace JSON (load it at https://ui.perfetto.dev),
+# and cross-checks the trace against the measured stats: the
+# trace-derived wait fraction must agree with WaitStats.wait_fraction
+# within 2 points, and attribution must name the halo-exchange
+# transfers as the top worker-wait source.  REPRO_TRACE=<path> picks the
+# export path (default stencil_trace.json).
+TRACE = os.environ.get("REPRO_TRACE", "")
+if TRACE not in ("", "0", "false", "False"):
+    from repro.obs import attribution, export_trace, validate_trace
+
+    with repro.trace() as tr:
+        st_tr, r_tr = run(mcfg, measured, MN, MITERS)
+    np.testing.assert_array_equal(r_tr, reference)
+    path = TRACE if TRACE not in ("1", "true", "True") else "stencil_trace.json"
+    export_trace(tr, path)
+    info = validate_trace(path)
+    print(f"\ntrace: {info['n_events']} events -> {path} "
+          f"(open in https://ui.perfetto.dev)")
+
+    rep = attribution(tr)
+    print(rep.format(5))
+    delta = abs(rep.wait_fraction - st_tr.wait_fraction)
+    print(f"wait fraction: trace {rep.wait_fraction * 100:.1f}% vs "
+          f"measured {st_tr.wait_fraction * 100:.1f}% (|delta| "
+          f"{delta * 100:.2f} points)")
+    assert delta < 0.02, (
+        f"trace-derived wait fraction diverged {delta * 100:.2f} points "
+        f"from the measured WaitStats"
+    )
+    worker_offenders = [
+        o for o in rep.offenders
+        if not o["group"].startswith("flush#") and o["group"] != "(end of trace)"
+    ]
+    assert worker_offenders and worker_offenders[0]["group"].startswith("xfer"), (
+        f"expected the halo-exchange transfers as top wait source, got "
+        f"{[o['group'] for o in worker_offenders[:3]]}"
+    )
+    print("attribution names the halo-exchange transfers as top wait source ✓")
+
 # --- the same schedule as a compiled TPU/XLA program --------------------
 # (runs on CPU here; on a TPU pod the ppermute halo exchange overlaps the
 # interior update via async collective-permute — DESIGN.md §3)

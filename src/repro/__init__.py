@@ -50,6 +50,12 @@ _API_EXPORTS = (
     "GIGE_2012",
     "TPU_V5E_ICI",
     "format_stats",
+    "trace",
+    "TraceCollector",
+    "export_trace",
+    "validate_trace",
+    "attribution",
+    "AttributionReport",
 )
 
 __all__ = list(_API_EXPORTS)

@@ -77,6 +77,14 @@ _CORE_EXPORTS = {
     "ClusterSpec": "repro.core.timeline",
     "GIGE_2012": "repro.core.timeline",
     "TPU_V5E_ICI": "repro.core.timeline",
+    # observability (repro.obs): lifecycle tracing, Perfetto export,
+    # wait attribution
+    "trace": "repro.obs",
+    "TraceCollector": "repro.obs",
+    "export_trace": "repro.obs",
+    "validate_trace": "repro.obs",
+    "attribution": "repro.obs",
+    "AttributionReport": "repro.obs",
 }
 
 __all__ = [

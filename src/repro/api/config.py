@@ -95,6 +95,12 @@ class ExecutionPolicy(_Replaceable):
     # programs and all paper figures bit-identical).  "auto" = demand
     # under flush="async", barrier under the simulator.
     sync: str = "auto"
+    # lifecycle tracing (repro.obs): False disables (the default — a true
+    # no-op), True collects into a ring buffer inspectable via
+    # ``Runtime.tracer``, a string additionally exports Chrome-trace JSON
+    # to that path when the runtime closes.  REPRO_TRACE=1 (or =path)
+    # enables it from the environment without touching the policy.
+    trace: Union[bool, str] = False
 
     def __post_init__(self):
         if self.scheduler not in registry.SCHEDULERS:
@@ -125,6 +131,11 @@ class ExecutionPolicy(_Replaceable):
         if self.progress_threads < 1:
             raise ValueError(
                 f"progress_threads must be >= 1, got {self.progress_threads}"
+            )
+        if not isinstance(self.trace, (bool, str)):
+            raise ValueError(
+                f"trace must be False, True, or an export path, got "
+                f"{self.trace!r}"
             )
         p = self.passes
         if isinstance(p, (list, tuple)):

@@ -25,7 +25,9 @@ def _source_of(stats) -> str:
     return "measured" if isinstance(stats, WaitStats) else "simulated"
 
 
-def format_stats(rows, header: bool = True, dispatch: bool = True) -> str:
+def format_stats(
+    rows, header: bool = True, dispatch: bool = True, per_worker: bool = False
+) -> str:
     """Render stats as an aligned table.
 
     ``rows`` is an iterable of ``(label, stats)`` pairs (a single pair
@@ -41,6 +43,11 @@ def format_stats(rows, header: bool = True, dispatch: bool = True) -> str:
     readback is one cone flush), worker handoffs per flush, and channel
     messages per flush — measured rows only carry the last two (the
     simulator has no worker queues), shown as ``-`` otherwise.
+
+    With ``per_worker=True``, each measured row is followed by an
+    indented per-worker breakdown (compute / comm-wait / idle per rank)
+    so skew between workers is visible without a full trace; simulated
+    rows have no worker threads and are skipped.
     """
     if isinstance(rows, tuple) and len(rows) == 2 and isinstance(rows[0], str):
         rows = [rows]
@@ -72,4 +79,11 @@ def format_stats(rows, header: bool = True, dispatch: bool = True) -> str:
                 f"ops/flush={opf:>9s} "
                 f"handoffs/flush={hand:>8s} msgs/flush={msgs:>8s}"
             )
+    if per_worker:
+        for label, st in rows:
+            table = getattr(st, "per_worker_table", None)
+            if table is None:  # simulated stats: no worker threads
+                continue
+            lines.append(f"per-worker: {label}")
+            lines.extend("  " + ln for ln in table().splitlines())
     return "\n".join(lines)

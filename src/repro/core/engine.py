@@ -24,12 +24,15 @@ flush (the simulator default).
 from __future__ import annotations
 
 import itertools
+import os
 import threading
 import weakref
 from dataclasses import dataclass, field
 from typing import Optional, Sequence, Union
 
 import numpy as np
+
+from repro.obs import collector as _obs
 
 from .blocks import (
     Fragment,
@@ -257,13 +260,14 @@ class FlushTicket:
     completed — the API surface is uniform across backends.
     """
 
-    __slots__ = ("_rt", "_fut", "_stats", "_resolved")
+    __slots__ = ("_rt", "_fut", "_stats", "_resolved", "_tag")
 
-    def __init__(self, rt: "Runtime", fut=None, stats=None):
+    def __init__(self, rt: "Runtime", fut=None, stats=None, tag=None):
         self._rt = rt
         self._fut = fut  # repro.exec Future -> WaitStats, or None
         self._stats = stats  # pre-completed result (sim flush / empty cone)
         self._resolved = fut is None
+        self._tag = tag  # flush id — the trace segment this ticket joins
 
     def done(self) -> bool:
         return self._resolved or self._fut.done()
@@ -275,14 +279,26 @@ class FlushTicket:
         flush had nothing to drain); raises the drain's failure."""
         if self._resolved:
             return self._stats
+        # the main thread blocking on a drain is the third wait reason:
+        # a barrier (whole-graph flush, or joining a demand-driven cone)
+        col = _obs.CURRENT
+        span = col is not None and not self._fut.done()
+        if span:
+            col.wait_start("main", "barrier")
         try:
             res = self._fut.result(timeout)
         except TimeoutError:
+            if span:
+                col.wait_end("main", "barrier", self._tag)
             raise  # still in flight — the ticket stays waitable
         except BaseException:
+            if span:
+                col.wait_end("main", "barrier", self._tag)
             self._resolved = True
             self._rt._ticket_failed(self)
             raise
+        if span:
+            col.wait_end("main", "barrier", self._tag)
         self._resolved = True
         self._stats = res
         self._rt._ticket_done(self, res)
@@ -324,6 +340,7 @@ class Runtime:
         exec_progress_threads: int = 2,
         passes: Union[str, Sequence[str]] = "auto",
         sync: str = "auto",
+        trace: Union[bool, str] = False,
     ):
         self.nprocs = nprocs
         self.block_size = block_size
@@ -414,6 +431,20 @@ class Runtime:
         self.flush_count = 0
         self._recorded_since_flush = 0
         self._in_record = 0
+        # -- tracing (repro.obs): a policy/kwarg request, or REPRO_TRACE.
+        # "1"/"true" enable collection; any other non-"0" value is also an
+        # export path written at close().  A trace() context manager active
+        # at __enter__ wins: the runtime adopts the ambient collector so
+        # one trace can span several runtimes.
+        if trace is False or trace is None:
+            env = os.environ.get("REPRO_TRACE", "")
+            if env not in ("", "0", "false", "False"):
+                trace = True if env in ("1", "true", "True") else env
+        self.trace_path = trace if isinstance(trace, str) else None
+        self._trace_requested = bool(trace)
+        self._trace_owned = False
+        self._trace_prev = None
+        self.tracer = None
 
     @classmethod
     def from_config(cls, config=None, policy=None) -> "Runtime":
@@ -443,6 +474,7 @@ class Runtime:
             # resolved here so ExecutionPolicy.resolved_sync is the single
             # authority on what "auto" means for the config path
             sync=policy.resolved_sync,
+            trace=policy.trace,
         )
 
     # -- context management -------------------------------------------------
@@ -450,6 +482,13 @@ class Runtime:
         if getattr(_tls, "runtime", None) is not None:
             raise RuntimeError("nested Runtimes are not supported")
         _tls.runtime = self
+        if _obs.CURRENT is not None:
+            # an ambient repro.trace() region owns the collector; adopt it
+            self.tracer = _obs.CURRENT
+        elif self._trace_requested:
+            self.tracer = _obs.TraceCollector()
+            self._trace_prev = _obs.activate(self.tracer)
+            self._trace_owned = True
         return self
 
     def __exit__(self, exc_type, exc, tb):
@@ -485,6 +524,13 @@ class Runtime:
                 self._exec_channel_obj.close()
                 self._exec_channel_obj = None
                 self._exec_backend_obj = None
+            if self._trace_owned:
+                _obs.deactivate(self._trace_prev)
+                self._trace_owned = False
+                if self.trace_path and self.tracer is not None:
+                    from repro.obs.export import export_trace
+
+                    export_trace(self.tracer, self.trace_path)
 
     # -- array creation -------------------------------------------------------
     def _make_layout(self, shape, block_shape=None) -> Layout:
@@ -864,6 +910,7 @@ class Runtime:
         self._sync_outstanding()
         deps = self.deps
         dead = set(self._dead_bases)
+        n_total = deps.n_pending
         if targets is not None:
             cone_ops, rest_ops = producer_cone(
                 deps.pending_ops(), self._resolve_targets(targets)
@@ -885,6 +932,13 @@ class Runtime:
                 self._barrier_cleanup()
                 return None if wait else FlushTicket(self)
             self.deps = DependencySystem()  # recording continues here
+        fid = self.flush_count + 1
+        col = _obs.CURRENT
+        if col is not None:
+            col.flush_begin(
+                fid, n_total, deps.n_pending, self.sync_mode, self.flush_backend
+            )
+            col.counter("cone-ops", deps.n_pending)
         hints = {}
         if self.passes:
             from .plan import plan as run_plan
@@ -901,7 +955,7 @@ class Runtime:
         self.flush_count += 1
         self._recorded_since_flush = self.deps.n_pending
         if self.flush_backend == "async":
-            ticket = self._flush_async(deps, hints)
+            ticket = self._flush_async(deps, hints, fid)
             if wait:
                 res = ticket.wait()
                 self._barrier_cleanup()
@@ -910,11 +964,15 @@ class Runtime:
             return ticket
         from repro.api.registry import get_scheduler
 
+        if col is not None:
+            col.drain_begin(fid, deps.n_pending, self.nprocs)
         res = get_scheduler(self.mode)(
             deps,
             self.cluster,
             executor=self._execute if self.execute else None,
         )
+        if col is not None:
+            col.drain_end(fid)
         self.result.merge(res)
         self._barrier_cleanup()
         return res if wait else FlushTicket(self, stats=res)
@@ -950,14 +1008,14 @@ class Runtime:
                     ids.add((base.id, frag.block))
         return ids
 
-    def _flush_async(self, deps, hints) -> FlushTicket:
+    def _flush_async(self, deps, hints, tag=None) -> FlushTicket:
         """Submit ``deps`` to the persistent multi-worker executor
         (repro.exec) and return the in-flight ticket without joining."""
         executor = self._ensure_executor()
         fut = executor.submit(
-            deps, batch_dispatch=bool(hints.get("batch_dispatch"))
+            deps, batch_dispatch=bool(hints.get("batch_dispatch")), tag=tag
         )
-        return FlushTicket(self, fut=fut)
+        return FlushTicket(self, fut=fut, tag=tag)
 
     def _ensure_executor(self):
         from repro.exec import AsyncExecutor, make_backend, make_channel

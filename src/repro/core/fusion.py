@@ -40,6 +40,7 @@ from __future__ import annotations
 from collections import defaultdict
 
 from repro.api.registry import register_pass
+from repro.obs import collector as _obs
 
 from .darray import Expr  # noqa: F401  (re-export: the record-time layer)
 from .engine import (
@@ -175,6 +176,9 @@ def _fuse_map_reduce(ctx: PlanContext) -> None:
             if not a.write:
                 node.add_access(AccessNode(a.key, a.region, write=False))
         node.add_access(AccessNode(("s", p.dst_scratch), None, write=True))
+        col = _obs.CURRENT
+        if col is not None:
+            col.op_rewritten("fuse", node, [mop.uid, op.uid])
         fused[mpos] = node
         dropped.add(i)
     if fused:

@@ -21,6 +21,8 @@ from collections import deque
 from dataclasses import dataclass, field
 from typing import Callable, Hashable, Iterable, Optional
 
+from repro.obs import collector as _obs
+
 from .blocks import Region
 
 __all__ = [
@@ -176,6 +178,11 @@ def _reset_for_reinsert(op: OperationNode) -> None:
 class DependencySystem:
     """Paper §5.7.2: per-base-block dependency lists + ready queue."""
 
+    # True while rebuild() re-inserts already-recorded ops (plan stage /
+    # cone extraction): re-insertion is replay, not recording, so the
+    # tracer must not see a second "recorded" event per op
+    _replay = False
+
     def __init__(self) -> None:
         # key -> list of live access-nodes, in insertion (program) order.
         self._lists: dict[Hashable, list[AccessNode]] = {}
@@ -206,9 +213,13 @@ class DependencySystem:
         relative order of the ops it keeps yields an equivalent
         schedule constraint set."""
         deps = cls()
-        for op in ops:
-            _reset_for_reinsert(op)
-            deps.insert(op)
+        deps._replay = True
+        try:
+            for op in ops:
+                _reset_for_reinsert(op)
+                deps.insert(op)
+        finally:
+            deps._replay = False
         return deps
 
     def insert(self, op: OperationNode) -> None:
@@ -227,6 +238,9 @@ class DependencySystem:
         op.refcount = refs
         self.n_ops += 1
         self.n_pending += 1
+        col = _obs.CURRENT
+        if col is not None and not self._replay:
+            col.op_recorded(op)
         if refs == 0:
             self._make_ready(op)
 

@@ -48,6 +48,7 @@ from dataclasses import dataclass, field
 from typing import Iterable, Optional, Sequence, Union
 
 from repro.api.registry import get_pass, register_pass
+from repro.obs import collector as _obs
 
 from .engine import CoalescedTransferPayload, TransferPayload
 from .graph import (
@@ -192,8 +193,12 @@ def plan(
         stats=stats,
         max_coalesce=max_coalesce,
     )
+    col = _obs.CURRENT
     for name in pipeline:
+        n_before = len(ctx.ops)
         get_pass(name)(ctx)
+        if col is not None:
+            col.plan_pass(name, n_before, len(ctx.ops))
     stats.n_ops_out = len(ctx.ops)
     new_deps = type(deps).rebuild(ctx.ops) if ctx.dirty else deps
     return PlanResult(new_deps, ctx.hints, stats)
@@ -267,6 +272,9 @@ def coalesce_transfers(ctx: PlanContext) -> None:
         for m in members:
             for acc in m.accesses:
                 merged.add_access(AccessNode(acc.key, acc.region, acc.write))
+        col = _obs.CURRENT
+        if col is not None:
+            col.op_rewritten("coalesce", merged, [m.uid for m in members])
         new_ops.append(merged)
         merged_away += len(members) - 1
     ctx.ops = new_ops

@@ -42,6 +42,7 @@ from repro.api.registry import get_backend, register_backend
 from repro.core.engine import MapPayload, MatmulPayload, execute_payload, resolve_ref
 from repro.core.graph import COMM, DependencySystem, OperationNode
 from repro.core.scheduler import DeadlockError, format_stuck_ops
+from repro.obs import collector as _obs
 
 from .channels import RendezvousDeadlock, RendezvousMailbox, make_channel
 from .futures import Future
@@ -448,6 +449,7 @@ class AsyncExecutor:
         self._ready_batch: list[OperationNode] = []
         self._drain_fut: Optional[Future] = None
         self._prev_hook = None
+        self._drain_tag = None  # flush id of the active drain (trace segment)
         self._t0 = 0.0
         self._snap: Optional[dict] = None
         self._error: Optional[BaseException] = None
@@ -529,9 +531,12 @@ class AsyncExecutor:
         """Execute one worker batch (comm-first order already applied by
         the pop) and complete it through a single dependency sweep."""
         completed: list[OperationNode] = []
+        col = _obs.CURRENT
         for op in ops:
             if op.kind == COMM:  # blocking channel only: inline transfer
                 t0 = time.perf_counter()  # wall: the blocking IS the waiting
+                if col is not None:
+                    col.wait_start(worker.rank, "channel")
                 fut = self.channel.post(op, self._exec_comm)
                 try:
                     # wait for resolution: the built-in BlockingChannel
@@ -542,27 +547,37 @@ class AsyncExecutor:
                 except BaseException as exc:
                     worker.stats.comm_busy += time.perf_counter() - t0
                     worker.stats.n_comm += 1
+                    if col is not None:
+                        col.wait_end(worker.rank, "channel", op.uid)
                     if completed:
                         self._ops_done(completed)
                     self._record_error(exc)
                     return
                 worker.stats.comm_busy += time.perf_counter() - t0
                 worker.stats.n_comm += 1
+                if col is not None:
+                    col.wait_end(worker.rank, "channel", op.uid)
                 completed.append(op)
                 continue
             # compute is accounted in per-thread CPU time: wall durations on
             # an oversubscribed machine include GIL/scheduler preemption,
             # which would inflate "busy" exactly when contention is worst
+            if col is not None:
+                col.compute_start(op.uid, worker.rank)
             t0 = time.thread_time()
             try:
                 self.backend.execute(op)
             except BaseException as exc:
+                if col is not None:
+                    col.compute_end(op.uid, worker.rank)
                 if completed:
                     self._ops_done(completed)
                 self._record_error(exc)
                 return
             worker.stats.compute_busy += time.thread_time() - t0
             worker.stats.n_compute += 1
+            if col is not None:
+                col.compute_end(op.uid, worker.rank)
             completed.append(op)
         self._ops_done(completed)
 
@@ -578,15 +593,26 @@ class AsyncExecutor:
 
     def _ops_done_inner(self, ops) -> None:
         finished = deadlocked = False
+        col = _obs.CURRENT
         with self._glock:
             if self._deps is None:  # drain already finalized
                 return
             deps = self._deps
             self._inflight -= len(ops)
+            ready_pairs = [] if col is not None else None
             for op in ops:
-                deps.complete(op)  # on_ready collects into _ready_batch
+                # complete() returns the ops this completion made ready —
+                # the causality edge wait attribution charges waits along
+                made_ready = deps.complete(op)  # on_ready -> _ready_batch
+                if ready_pairs is not None:
+                    for nxt in made_ready:
+                        ready_pairs.append((nxt.uid, op.uid))
+            if ready_pairs:
+                col.ready_many(ready_pairs)
             newly, self._ready_batch = self._ready_batch, []
             self._inflight += len(newly)
+            if col is not None:
+                col.counter("ops-inflight", self._inflight)
             for nxt in newly:
                 self._count_op(nxt)
             if self._inflight == 0:
@@ -647,6 +673,7 @@ class AsyncExecutor:
                 return
             deps, self._deps = self._deps, None
             fut, self._drain_fut = self._drain_fut, None
+            tag, self._drain_tag = self._drain_tag, None
             self._ready_batch = []
             # a failed drain may leave the erroring op (and friends)
             # uncounted; late completions of in-flight ops return early on
@@ -655,6 +682,9 @@ class AsyncExecutor:
             self._inflight = 0
         if deps is not None:
             deps.on_ready = self._prev_hook
+        col = _obs.CURRENT
+        if col is not None:
+            col.drain_end(tag)
         elapsed = time.perf_counter() - self._t0
         if exc is not None:
             fut.set_exception(exc)
@@ -662,7 +692,12 @@ class AsyncExecutor:
             fut.set_result(self._stats_since(self._snap, elapsed))
 
     # -- main entry -------------------------------------------------------
-    def submit(self, deps: DependencySystem, batch_dispatch: Optional[bool] = None) -> Future:
+    def submit(
+        self,
+        deps: DependencySystem,
+        batch_dispatch: Optional[bool] = None,
+        tag=None,
+    ) -> Future:
         """Start draining ``deps`` and return a Future resolving to the
         drain's :class:`WaitStats` (or raising its failure).  Returns
         immediately; the caller keeps the main thread.  One drain may be
@@ -689,6 +724,10 @@ class AsyncExecutor:
         with self._glock:
             self._deps = deps
             self._drain_fut = fut
+            self._drain_tag = tag
+        col = _obs.CURRENT
+        if col is not None:
+            col.drain_begin(tag, deps.n_pending, self.nworkers)
         if not self._workers_started:
             self._workers_started = True
             for w in self.workers:

@@ -36,6 +36,7 @@ import time
 from typing import Callable, Optional
 
 from repro.api.registry import get_channel, register_channel
+from repro.obs import collector as _obs
 
 from .futures import Future
 
@@ -56,6 +57,7 @@ class AsyncChannel:
     serializes on the progress threads."""
 
     blocking = False
+    trace_name = "async"
 
     def __init__(self, progress_threads: int = 2, latency: float = 0.0):
         self.latency = latency
@@ -78,10 +80,14 @@ class AsyncChannel:
         """Initiate a transfer; returns immediately with its future."""
         fut = Future()
         due = time.monotonic() + self.latency
+        col = _obs.CURRENT
         with self._cv:
             self.n_posted += 1
             heapq.heappush(self._heap, (due, self._seq, op, execute, fut))
             self._seq += 1
+            if col is not None:
+                col.msg_posted(op, self.trace_name)
+                col.counter("msgs-inflight", self.n_posted - self.n_delivered)
             self._cv.notify()
         return fut
 
@@ -92,13 +98,18 @@ class AsyncChannel:
         batched worker handoff."""
         futs = []
         due = time.monotonic() + self.latency
+        col = _obs.CURRENT
         with self._cv:
             for op, execute in items:
                 fut = Future()
                 self.n_posted += 1
                 heapq.heappush(self._heap, (due, self._seq, op, execute, fut))
                 self._seq += 1
+                if col is not None:
+                    col.msg_posted(op, self.trace_name)
                 futs.append(fut)
+            if col is not None and items:
+                col.counter("msgs-inflight", self.n_posted - self.n_delivered)
             self._cv.notify_all()
         return futs
 
@@ -117,6 +128,9 @@ class AsyncChannel:
                         self._cv.wait(timeout=due - now)
                     else:
                         self._cv.wait()
+            col = _obs.CURRENT
+            if col is not None:
+                col.msg_progressed(op.uid, self.trace_name)
             try:
                 execute(op)
             except BaseException as exc:  # surface through the future
@@ -124,6 +138,9 @@ class AsyncChannel:
                 continue
             with self._cv:
                 self.n_delivered += 1
+                if col is not None:
+                    col.msg_delivered(op.uid, self.trace_name)
+                    col.counter("msgs-inflight", self.n_posted - self.n_delivered)
             fut.set_result(op)
 
     def close(self) -> None:
@@ -141,6 +158,7 @@ class BlockingChannel:
     """Synchronous channel: the transfer happens on the caller's thread."""
 
     blocking = True
+    trace_name = "blocking"
 
     def __init__(self, latency: float = 0.0):
         self.latency = latency
@@ -150,8 +168,12 @@ class BlockingChannel:
 
     def post(self, op, execute: TransferFn) -> Future:
         fut = Future()
+        col = _obs.CURRENT
         with self._count_lock:
             self.n_posted += 1
+        if col is not None:
+            col.msg_posted(op, self.trace_name)
+            col.msg_progressed(op.uid, self.trace_name)
         try:
             if self.latency > 0.0:
                 time.sleep(self.latency)
@@ -161,6 +183,8 @@ class BlockingChannel:
             return fut
         with self._count_lock:
             self.n_delivered += 1
+        if col is not None:
+            col.msg_delivered(op.uid, self.trace_name)
         fut.set_result(op)
         return fut
 

@@ -122,8 +122,19 @@ class WaitStats:
 
     def merge(self, other: "WaitStats") -> "WaitStats":
         """Accumulate a later flush (flushes are serialized, so wall-clock
-        durations add)."""
-        assert other.nworkers == self.nworkers
+        durations add).
+
+        Merging stats from runs with different worker counts pads
+        ``procs`` to the wider of the two — ``zip`` would silently drop
+        the extra workers' accounting (and misattribute rank i of one
+        run to rank i of the other being the *same* thread, which they
+        are not across runtimes; per-rank rows after a mixed merge are
+        positional sums, the totals are exact)."""
+        if other.nworkers > self.nworkers:
+            self.procs.extend(
+                WorkerStats() for _ in range(other.nworkers - self.nworkers)
+            )
+            self.nworkers = other.nworkers
         self.elapsed += other.elapsed
         self.comm_bytes += other.comm_bytes
         self.n_comm_ops += other.n_comm_ops

@@ -39,6 +39,7 @@ from collections import deque
 from typing import Callable, Optional, Sequence
 
 from repro.core.graph import COMM, OperationNode
+from repro.obs import collector as _obs
 
 from .stats import WorkerStats
 
@@ -71,8 +72,13 @@ class Worker(threading.Thread):
     def push_batch(self, ops: Sequence[OperationNode]) -> None:
         """Enqueue a list of ready ops with a single lock+notify — one
         handoff regardless of the batch size."""
+        col = _obs.CURRENT
         with self._cv:
             self._queue.extend(ops)
+            if col is not None:
+                depth = len(self._queue)
+                col.enqueued_many([op.uid for op in ops], self.rank, depth)
+                col.counter(f"w{self.rank}.qdepth", depth)
             self._cv.notify()
 
     def push(self, op: OperationNode) -> None:
@@ -103,6 +109,7 @@ class Worker(threading.Thread):
         single comm-first op (unbatched).  Any ready transfer outranks
         every ready compute (invariant 2).  Blocks while the queue is
         empty, accounting idle time; returns None on shutdown."""
+        col = _obs.CURRENT
         with self._cv:
             idle_from = None
             while not self._queue:
@@ -110,6 +117,8 @@ class Worker(threading.Thread):
                     return None
                 if idle_from is None:
                     idle_from = time.perf_counter()
+                    if col is not None:
+                        col.wait_start(self.rank, "empty-queue")
                 self._cv.wait()
             if idle_from is not None:
                 self.stats.idle += time.perf_counter() - max(
@@ -117,14 +126,24 @@ class Worker(threading.Thread):
                 )
             self.stats.n_wakeups += 1
             if not self._batch:
+                ops = None
                 for i, op in enumerate(self._queue):
                     if op.kind == COMM:
                         del self._queue[i]
-                        return [op]
-                return [self._queue.popleft()]
-            ops = list(self._queue)
-            self._queue.clear()
-        ops.sort(key=lambda op: op.kind != COMM)  # comm-first, stable
+                        ops = [op]
+                        break
+                if ops is None:
+                    ops = [self._queue.popleft()]
+            else:
+                ops = list(self._queue)
+                self._queue.clear()
+        if self._batch:
+            ops.sort(key=lambda op: op.kind != COMM)  # comm-first, stable
+        if col is not None:
+            if idle_from is not None:
+                col.wait_end(self.rank, "empty-queue", ops[0].uid)
+            col.dequeued_many([op.uid for op in ops], self.rank)
+            col.counter(f"w{self.rank}.batch", len(ops))
         return ops
 
     def run(self) -> None:

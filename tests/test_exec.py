@@ -235,6 +235,31 @@ def test_waitstats_merge_and_summary():
     assert "worker" in a.per_worker_table()
 
 
+def test_waitstats_merge_differing_nworkers():
+    # regression: merging stats from runs with different worker counts
+    # used to zip procs positionally and silently drop (or crash on) the
+    # extra workers' accounting — merge now pads to the wider run
+    a = WaitStats(mode="async", nworkers=2, elapsed=1.0, n_compute_ops=2)
+    a.procs[0].compute_busy = 1.0
+    a.procs[1].compute_busy = 0.5
+    wide = WaitStats(mode="async", nworkers=4, elapsed=1.0, n_compute_ops=4)
+    for i in range(4):
+        wide.procs[i].compute_busy = 0.25
+    a.merge(wide)
+    assert a.nworkers == 4
+    assert len(a.procs) == 4
+    assert a.total_compute == pytest.approx(1.0 + 0.5 + 1.0)
+    assert a.procs[2].compute_busy == pytest.approx(0.25)
+    # narrower other: extra self workers keep their time untouched
+    narrow = WaitStats(mode="async", nworkers=1, elapsed=0.5)
+    narrow.procs[0].compute_busy = 0.1
+    a.merge(narrow)
+    assert a.nworkers == 4 and len(a.procs) == 4
+    assert a.procs[0].compute_busy == pytest.approx(1.0 + 0.25 + 0.1)
+    assert a.procs[3].compute_busy == pytest.approx(0.25)
+    assert a.elapsed == pytest.approx(2.5)
+
+
 def test_runtime_stats_returns_waitstats():
     from repro.core import Runtime
     from repro.core import darray as dnp

@@ -1,0 +1,333 @@
+"""repro.obs tests: lifecycle-event completeness, the disabled-path
+no-op guarantee, Chrome-trace export schema, wait attribution, and the
+trace-enables-nothing invariant (traced runs stay bit-identical).
+
+The completeness tests run with ``passes=()`` so the recorded uids are
+the executing uids — rewrite passes (coalesce/fuse) replace nodes, which
+is exercised separately via the ``rewritten`` provenance events.
+"""
+import json
+from collections import Counter
+
+import numpy as np
+import pytest
+
+import repro
+from repro import api
+from repro.core import COMM, COMPUTE
+from repro.obs import (
+    AttributionReport,
+    TraceCollector,
+    attribution,
+    export_trace,
+    trace,
+    validate_trace,
+)
+from repro.obs import collector as obs_collector
+from repro.obs.collector import activate, current_tracer, deactivate
+
+
+@pytest.fixture(autouse=True)
+def _no_leaked_tracer():
+    """Tracing must never leak across tests (or from a crashed one)."""
+    obs_collector.CURRENT = None
+    yield
+    obs_collector.CURRENT = None
+
+
+def _program(**rt_kwargs):
+    """Small pipeline with genuine inter-process transfers (roll)."""
+    with repro.runtime(block_size=32, **rt_kwargs) as rt:
+        a = repro.array(np.arange(16384.0).reshape(128, 128))
+        b = np.sqrt(a * a + 1.0)
+        c = api.roll(b, 1, axis=0) + b
+        out = np.asarray(np.sum(c, axis=0))
+        st = rt.stats()
+    return out, st, rt
+
+
+# ---------------------------------------------------------------------------
+# event completeness
+# ---------------------------------------------------------------------------
+
+
+def test_event_completeness_async():
+    with trace() as tr:
+        _program(nprocs=4, flush="async", passes=())
+    ev = list(tr.events)
+    etypes = Counter(et for _, et, _, _, _ in ev)
+    assert tr.dropped == 0
+
+    # every recorded compute op executes exactly once (start and end)
+    recorded_compute = sorted(
+        uid for _, et, uid, _, _ in ev
+        if et == "recorded" and tr.ops[uid][0] == COMPUTE
+    )
+    starts = sorted(uid for _, et, uid, _, _ in ev if et == "compute-start")
+    ends = sorted(uid for _, et, uid, _, _ in ev if et == "compute-end")
+    assert starts == recorded_compute
+    assert ends == recorded_compute
+
+    # every compute op passes through a worker queue exactly once
+    enq = Counter(uid for _, et, uid, _, _ in ev if et == "enqueued")
+    deq = Counter(uid for _, et, uid, _, _ in ev if et == "dequeued")
+    for uid in recorded_compute:
+        assert enq[uid] == 1 and deq[uid] == 1
+
+    # every posted message was delivered (the drain barrier guarantees it)
+    posted = sorted(uid for _, et, uid, _, _ in ev if et == "msg-posted")
+    delivered = sorted(uid for _, et, uid, _, _ in ev if et == "msg-delivered")
+    assert posted and posted == delivered
+    for uid in posted:
+        assert tr.ops[uid][0] == COMM
+
+    # flush/drain segmentation is balanced and tagged
+    assert etypes["flush-begin"] >= 1
+    drain_b = [uid for _, et, uid, _, _ in ev if et == "drain-begin"]
+    drain_e = [uid for _, et, uid, _, _ in ev if et == "drain-end"]
+    assert sorted(drain_b) == sorted(drain_e)
+
+    # timestamps are monotonic non-decreasing per the deque order...
+    # (events interleave across threads; only sanity-check the range)
+    ts = [e[0] for e in ev]
+    assert min(ts) >= 0.0 and max(ts) >= min(ts)
+
+
+def test_rewrite_provenance_events():
+    # default pipeline coalesces transfers: rewritten events carry the
+    # pass name and the source uids they replace
+    with trace() as tr:
+        _program(nprocs=4, flush="async", passes="auto")
+    ev = list(tr.events)
+    passes_run = [x[0] for _, et, _, _, x in ev if et == "plan-pass"]
+    assert "coalesce" in passes_run
+    rewrites = [(uid, x) for _, et, uid, _, x in ev if et == "rewritten"]
+    assert rewrites
+    for uid, (pass_name, srcs) in rewrites:
+        assert pass_name in ("coalesce", "fuse")
+        assert len(srcs) >= 2
+        assert uid in tr.ops
+
+
+def test_sim_flush_traced():
+    with trace() as tr:
+        out, st, _ = _program(nprocs=4, flush="sim")
+    ev = list(tr.events)
+    etypes = {et for _, et, _, _, _ in ev}
+    assert "recorded" in etypes and "flush-begin" in etypes
+    assert "drain-begin" in etypes and "drain-end" in etypes
+    validate_trace(export_trace(tr))
+
+
+# ---------------------------------------------------------------------------
+# disabled path: a true no-op
+# ---------------------------------------------------------------------------
+
+
+def test_disabled_no_collector_no_tracer():
+    out, st, rt = _program(nprocs=4, flush="async")
+    assert obs_collector.CURRENT is None
+    assert rt.tracer is None
+    assert current_tracer() is None
+
+
+@pytest.mark.parametrize("flush", ["async", "sim"])
+@pytest.mark.parametrize("sync", ["demand", "barrier"])
+def test_traced_bit_identical(flush, sync):
+    if flush == "sim" and sync == "demand":
+        pytest.skip("simulator resolves sync to barrier")
+    base, _, _ = _program(nprocs=4, flush=flush, sync=sync)
+    with trace():
+        traced, _, _ = _program(nprocs=4, flush=flush, sync=sync)
+    np.testing.assert_array_equal(base, traced)
+
+
+@pytest.mark.parametrize("passes", ["auto", ()])
+def test_traced_bit_identical_across_passes(passes):
+    base, _, _ = _program(nprocs=4, flush="async", passes=passes)
+    with trace():
+        traced, _, _ = _program(nprocs=4, flush="async", passes=passes)
+    np.testing.assert_array_equal(base, traced)
+
+
+# ---------------------------------------------------------------------------
+# trace context manager / activation plumbing
+# ---------------------------------------------------------------------------
+
+
+def test_trace_cm_nesting_restores_previous():
+    outer = TraceCollector()
+    prev = activate(outer)
+    assert current_tracer() is outer
+    with trace() as inner:
+        assert current_tracer() is inner
+        assert inner is not outer
+    assert current_tracer() is outer
+    deactivate(prev)
+    assert current_tracer() is None
+
+
+def test_trace_cm_exports_on_exit(tmp_path):
+    path = tmp_path / "t.json"
+    with trace(str(path)):
+        _program(nprocs=2, flush="async")
+    doc = json.loads(path.read_text())
+    info = validate_trace(doc)
+    assert info["n_events"] > 0
+
+
+def test_runtime_adopts_ambient_collector():
+    with trace() as tr:
+        _, _, rt = _program(nprocs=2, flush="async")
+        assert rt.tracer is tr
+    # the runtime must not deactivate a collector it does not own
+    assert current_tracer() is None
+
+
+def test_policy_trace_field(tmp_path):
+    with pytest.raises(ValueError):
+        repro.ExecutionPolicy(trace=3)
+    path = tmp_path / "policy.json"
+    with repro.runtime(nprocs=2, flush="async", trace=str(path)) as rt:
+        a = repro.array(np.ones((32, 32)))
+        np.asarray(a + 1.0)
+        assert rt.tracer is not None
+        assert current_tracer() is rt.tracer
+    assert current_tracer() is None
+    validate_trace(json.loads(path.read_text()))
+
+
+def test_repro_trace_env(monkeypatch, tmp_path):
+    monkeypatch.setenv("REPRO_TRACE", "1")
+    _, _, rt = _program(nprocs=2, flush="async")
+    assert rt.tracer is not None and rt.trace_path is None
+
+    path = tmp_path / "env.json"
+    monkeypatch.setenv("REPRO_TRACE", str(path))
+    _program(nprocs=2, flush="async")
+    validate_trace(json.loads(path.read_text()))
+
+    monkeypatch.setenv("REPRO_TRACE", "0")
+    _, _, rt = _program(nprocs=2, flush="async")
+    assert rt.tracer is None
+
+
+# ---------------------------------------------------------------------------
+# exporter schema
+# ---------------------------------------------------------------------------
+
+
+def test_export_schema_and_tracks():
+    with trace() as tr:
+        _program(nprocs=4, flush="async", latency=2e-4)
+    doc = export_trace(tr)
+    info = validate_trace(doc)
+    assert doc["displayTimeUnit"] == "ms"
+    assert info["n_events"] > 0
+    # runtime, worker, and counter tracks all present
+    assert {1, 2, 4} <= set(info["pids"])
+    # at least one channel track
+    assert any(pid >= 10 for pid in info["pids"])
+    per_phase = info["per_phase"]
+    assert per_phase.get("X", 0) > 0  # compute/wait slices
+    assert per_phase.get("C", 0) > 0  # counters
+    assert per_phase.get("b", 0) == per_phase.get("e", 0)  # async msgs balance
+    assert per_phase.get("s", 0) == per_phase.get("f", 0)  # flow arrows pair up
+    # worker tids are named
+    names = [e for e in doc["traceEvents"] if e["ph"] == "M"]
+    assert any(e["args"]["name"].startswith("worker") for e in names
+               if e["name"] == "thread_name")
+
+
+def test_validate_trace_rejects_malformed():
+    with pytest.raises(ValueError):
+        validate_trace({"traceEvents": [{"ph": "Z", "pid": 1, "ts": 0.0, "name": "x"}]})
+    with pytest.raises(ValueError):
+        validate_trace({"traceEvents": [{"ph": "X", "pid": 1, "ts": 0.0, "name": "x"}]})
+    with pytest.raises(ValueError):  # unbalanced async begin
+        validate_trace({"traceEvents": [
+            {"ph": "b", "pid": 1, "tid": 0, "ts": 0.0, "cat": "msg", "id": "1", "name": "m"},
+        ]})
+
+
+def test_export_roundtrip_file(tmp_path):
+    with trace() as tr:
+        _program(nprocs=2, flush="async")
+    path = tmp_path / "rt.json"
+    doc = export_trace(tr, str(path))
+    on_disk = json.loads(path.read_text())
+    assert validate_trace(on_disk) == validate_trace(doc)
+
+
+# ---------------------------------------------------------------------------
+# wait attribution
+# ---------------------------------------------------------------------------
+
+
+def test_attribution_report_shape():
+    with trace() as tr:
+        out, st, _ = _program(nprocs=4, flush="async", latency=1e-3)
+    rep = attribution(tr)
+    assert isinstance(rep, AttributionReport)
+    assert rep.nworkers == 4
+    assert rep.elapsed > 0
+    assert 0.0 <= rep.wait_fraction <= 1.0
+    assert rep.n_spans > 0
+    assert rep.offenders  # something was waited on
+    top = rep.top(3)
+    assert len(top) <= 3
+    assert top[0]["seconds"] >= (top[1]["seconds"] if len(top) > 1 else 0.0)
+    text = rep.format(5)
+    assert "wait attribution" in text and "offender" in text
+    assert set(rep.per_worker) == set(range(4))
+
+
+def test_attribution_charges_transfers_under_latency():
+    # with injected wire latency the roll()'s halo transfers dominate:
+    # attribution must name the transfer group among the top offenders
+    with trace() as tr:
+        _program(nprocs=4, flush="async", latency=2e-3)
+    rep = attribution(tr)
+    worker_offenders = [
+        o for o in rep.offenders if not o["group"].startswith("flush#")
+    ]
+    assert worker_offenders
+    xfer_groups = [o for o in worker_offenders if o["group"].startswith("xfer")]
+    assert xfer_groups, [o["group"] for o in rep.offenders]
+    # transfer offenders carry message traffic detail
+    assert xfer_groups[0]["n_msgs"] >= 1
+    assert xfer_groups[0]["msg_bytes"] > 0
+
+
+def test_demand_sync_multiple_drain_segments():
+    with trace() as tr:
+        with repro.runtime(nprocs=4, block_size=32, flush="async",
+                           sync="demand") as rt:
+            a = repro.array(np.arange(4096.0).reshape(64, 64))
+            b = a * 2.0
+            np.asarray(np.sum(b))       # cone flush 1
+            c = a + 1.0
+            np.asarray(np.sum(c))       # cone flush 2
+    tags = [uid for _, et, uid, _, _ in tr.events if et == "drain-begin"]
+    assert len(tags) >= 2
+    assert len(set(tags)) == len(tags)  # distinct flush ids
+
+
+# ---------------------------------------------------------------------------
+# reporting integration (satellite: per-worker breakdown)
+# ---------------------------------------------------------------------------
+
+
+def test_format_stats_per_worker():
+    _, st, _ = _program(nprocs=4, flush="async")
+    default = repro.format_stats([("run", st)])
+    assert "per-worker" not in default
+    s = repro.format_stats([("run", st)], per_worker=True)
+    assert "per-worker: run" in s
+    assert "worker" in s and "compute ms" in s
+    # simulated rows are skipped, not crashed on
+    _, sim_st, _ = _program(nprocs=4, flush="sim")
+    both = repro.format_stats(
+        [("meas", st), ("sim", sim_st)], per_worker=True
+    )
+    assert "per-worker: meas" in both and "per-worker: sim" not in both
