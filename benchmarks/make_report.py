@@ -93,6 +93,8 @@ def overlap_table():
         return
     for f in files:
         r = json.loads(f.read_text())
+        if r.get("section") == "serve-load":
+            continue  # rendered by serve_load_table
         print(f"**{r.get('section', f.stem)}** — backend={r.get('backend')}, "
               f"nprocs={r.get('nprocs')}, α={r.get('latency_s', 0) * 1e3:.0f} ms, "
               f"overlap win {r.get('overlap_win', 0):.2f}×\n")
@@ -120,6 +122,33 @@ def overlap_table():
         print()
 
 
+def serve_load_table():
+    """Render ``results/BENCH_serve_load.json`` (from
+    ``benchmarks.serve_load``): serialized vs concurrent cone drains
+    under multi-tenant load, with the latency quantiles."""
+    f = Path("results/BENCH_serve_load.json")
+    if not f.exists():
+        print("  (no BENCH_serve_load.json — run `python -m benchmarks.serve_load`)")
+        return
+    r = json.loads(f.read_text())
+    print(f"**serve-load** — {r['clients']} clients, {r['requests']} requests, "
+          f"{r['nprocs']} procs, α={r['latency_s'] * 1e3:.0f} ms, "
+          f"concurrent/serialized throughput {r['speedup']:.2f}×, "
+          f"corrupted results: {r['corruption']}\n")
+    print("| variant | inflight | elapsed s | req/s | p50 ms | p95 ms | p99 ms | max ms | rejected |")
+    print("|---|---|---|---|---|---|---|---|---|")
+    for label in ("serialized", "concurrent"):
+        v = r["variants"].get(label)
+        if not v:
+            continue
+        print(f"| {label} | {v['max_inflight']} | {v['elapsed_s']:.1f} | "
+              f"{v['throughput_rps']:.1f} | {v['latency_p50_s'] * 1e3:.1f} | "
+              f"{v['latency_p95_s'] * 1e3:.1f} | {v['latency_p99_s'] * 1e3:.1f} | "
+              f"{v['latency_max_s'] * 1e3:.1f} | {v['n_rejected']} |")
+    print(f"\n(p99 budget: {r['p99_budget_s'] * 1e3:.1f} ms — "
+          f"{r['variants']['concurrent']['latency_p99_s'] * 1e3:.1f} ms observed)\n")
+
+
 if __name__ == "__main__":
     import sys
 
@@ -135,6 +164,10 @@ if __name__ == "__main__":
     if which in ("all", "overlap"):
         print("### Measured overlap & wait attribution\n")
         overlap_table()
+        print()
+    if which in ("all", "serve"):
+        print("### Multi-tenant serving load\n")
+        serve_load_table()
         print()
     if which in ("all", "perf"):
         print("### Perf iterations\n")

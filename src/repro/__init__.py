@@ -19,6 +19,7 @@ _API_EXPORTS = (
     "runtime",
     "RuntimeConfig",
     "ExecutionPolicy",
+    "ServeConfig",
     "Runtime",
     "FlushTicket",
     "current_runtime",
@@ -56,6 +57,12 @@ _API_EXPORTS = (
     "validate_trace",
     "attribution",
     "AttributionReport",
+    "Server",
+    "Session",
+    "Request",
+    "TenantStats",
+    "AdmissionError",
+    "LatencyHistogram",
 )
 
 __all__ = list(_API_EXPORTS)

@@ -40,7 +40,7 @@ modules register their plugins with :mod:`repro.api.registry` at import
 time, so the registry layer must stay importable from inside
 ``repro.core`` without cycling back through the array layer.
 """
-from .config import ExecutionPolicy, RuntimeConfig, runtime
+from .config import ExecutionPolicy, RuntimeConfig, ServeConfig, runtime
 from .futures import ArrayFuture, evaluate, gather, wait
 from .registry import (
     available_backends,
@@ -85,6 +85,14 @@ _CORE_EXPORTS = {
     "validate_trace": "repro.obs",
     "attribution": "repro.obs",
     "AttributionReport": "repro.obs",
+    # multi-tenant serving runtime (repro.serve): one shared Runtime,
+    # concurrent per-request cone drains, admission control
+    "Server": "repro.serve",
+    "Session": "repro.serve",
+    "Request": "repro.serve",
+    "TenantStats": "repro.serve",
+    "AdmissionError": "repro.serve",
+    "LatencyHistogram": "repro.serve",
 }
 
 __all__ = [
@@ -92,6 +100,7 @@ __all__ = [
     "runtime",
     "RuntimeConfig",
     "ExecutionPolicy",
+    "ServeConfig",
     # demand-driven evaluation (futures surface)
     "ArrayFuture",
     "evaluate",

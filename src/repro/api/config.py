@@ -34,7 +34,7 @@ from repro.core.timeline import ClusterSpec
 
 from . import registry
 
-__all__ = ["RuntimeConfig", "ExecutionPolicy", "runtime"]
+__all__ = ["RuntimeConfig", "ExecutionPolicy", "ServeConfig", "runtime"]
 
 
 class _Replaceable:
@@ -101,6 +101,15 @@ class ExecutionPolicy(_Replaceable):
     # to that path when the runtime closes.  REPRO_TRACE=1 (or =path)
     # enables it from the environment without touching the policy.
     trace: Union[bool, str] = False
+    # work stealing on the async executor's worker pool (arXiv 1805.01768
+    # regime): an idle worker steals from the longest peer queue holding
+    # at least ``steal_threshold`` ops, and only when the expected work
+    # moved (ops x measured task grain) exceeds ``steal_latency`` — the
+    # round-trip cost of a steal.  Disable for strictly owner-computes
+    # placement studies.
+    steal: bool = True
+    steal_threshold: int = 4
+    steal_latency: float = 1e-4
 
     def __post_init__(self):
         if self.scheduler not in registry.SCHEDULERS:
@@ -131,6 +140,15 @@ class ExecutionPolicy(_Replaceable):
         if self.progress_threads < 1:
             raise ValueError(
                 f"progress_threads must be >= 1, got {self.progress_threads}"
+            )
+        if self.steal_threshold < 2:
+            raise ValueError(
+                f"steal_threshold must be >= 2 (a victim keeps at least "
+                f"one op), got {self.steal_threshold}"
+            )
+        if self.steal_latency < 0:
+            raise ValueError(
+                f"steal_latency must be >= 0 seconds, got {self.steal_latency}"
             )
         if not isinstance(self.trace, (bool, str)):
             raise ValueError(
@@ -178,6 +196,37 @@ class ExecutionPolicy(_Replaceable):
         if self.channel is not None:
             return self.channel
         return "async" if self.scheduler == "latency_hiding" else "blocking"
+
+
+@dataclass(frozen=True)
+class ServeConfig(_Replaceable):
+    """Admission control for the multi-tenant serving runtime
+    (:class:`repro.serve.Server`).
+
+    ``max_inflight`` bounds the number of request cones draining
+    concurrently on the shared worker pool; ``max_queue`` bounds the
+    admission queue — a request arriving with the queue full is shed
+    immediately with :class:`repro.serve.AdmissionError` (the clear
+    rejection signal; clients retry with backoff).  ``admission_timeout``
+    (seconds, ``None`` = wait forever) bounds how long an admitted-queue
+    request may wait for an in-flight slot before it too is rejected."""
+
+    max_inflight: int = 8
+    max_queue: int = 64
+    admission_timeout: Optional[float] = None
+
+    def __post_init__(self):
+        if self.max_inflight < 1:
+            raise ValueError(
+                f"max_inflight must be >= 1, got {self.max_inflight}"
+            )
+        if self.max_queue < 0:
+            raise ValueError(f"max_queue must be >= 0, got {self.max_queue}")
+        if self.admission_timeout is not None and self.admission_timeout <= 0:
+            raise ValueError(
+                f"admission_timeout must be positive seconds or None, "
+                f"got {self.admission_timeout}"
+            )
 
 
 _CONFIG_FIELDS = {f.name for f in dataclasses.fields(RuntimeConfig)}

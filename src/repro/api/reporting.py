@@ -22,7 +22,10 @@ _HEADER = (
 def _source_of(stats) -> str:
     from repro.exec.stats import WaitStats
 
-    return "measured" if isinstance(stats, WaitStats) else "simulated"
+    # serve.TenantStats wraps a WaitStats in .wait (plus a latency
+    # histogram); it renders as a measured row
+    inner = getattr(stats, "wait", stats)
+    return "measured" if isinstance(inner, WaitStats) else "simulated"
 
 
 def format_stats(
@@ -79,6 +82,24 @@ def format_stats(
                 f"ops/flush={opf:>9s} "
                 f"handoffs/flush={hand:>8s} msgs/flush={msgs:>8s}"
             )
+    # request-latency quantiles: rows carrying a latency histogram
+    # (serve.TenantStats) get a latency: line with p50/p95/p99 and the
+    # admission counters — absent for plain stats objects
+    for label, st in rows:
+        hist = getattr(st, "latency", None)
+        if hist is None or not getattr(hist, "count", 0):
+            continue
+        extra = ""
+        n_rej = getattr(st, "n_rejected", 0)
+        n_fail = getattr(st, "n_failed", 0)
+        if n_rej or n_fail:
+            extra = f" rejected={n_rej} failed={n_fail}"
+        lines.append(
+            f"latency:  {label:<26s} n={hist.count:<7d} "
+            f"p50={hist.p50 * 1e3:8.2f}ms p95={hist.p95 * 1e3:8.2f}ms "
+            f"p99={hist.p99 * 1e3:8.2f}ms max={hist.max * 1e3:8.2f}ms"
+            + extra
+        )
     if per_worker:
         for label, st in rows:
             table = getattr(st, "per_worker_table", None)

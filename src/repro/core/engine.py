@@ -248,6 +248,16 @@ def execute_payload(p, storage: dict, scratch: dict) -> None:
         raise TypeError(f"unknown payload {type(p)}")
 
 
+def _wait_label() -> str:
+    """Trace label for a thread blocked on a ticket: ``"main"`` for the
+    main thread, a per-thread client label otherwise — concurrent
+    waiters must not collide on one wait-span key."""
+    t = threading.current_thread()
+    if t is threading.main_thread():
+        return "main"
+    return f"client-{t.ident}"
+
+
 class FlushTicket:
     """Handle on one (possibly still draining) flush — what
     ``Runtime.flush(wait=False)`` returns instead of joining the
@@ -258,50 +268,81 @@ class FlushTicket:
     once, and returns the flush's stats object; ``done()`` polls.  A
     ticket for a simulated (or empty) flush comes back already
     completed — the API surface is uniform across backends.
-    """
 
-    __slots__ = ("_rt", "_fut", "_stats", "_resolved", "_tag")
+    Tickets are thread-safe: with concurrent cone drains (the serving
+    runtime), several client threads may wait the same ticket, and the
+    runtime's reaper may resolve it first.  Bookkeeping (stats merge,
+    ticket-list removal) runs exactly once, on whichever thread resolves
+    first; a ticket that failed re-raises its exception on every
+    subsequent ``wait()``."""
 
-    def __init__(self, rt: "Runtime", fut=None, stats=None, tag=None):
+    __slots__ = ("_rt", "_fut", "_stats", "_resolved", "_tag", "_keys",
+                 "_exc", "_lock")
+
+    def __init__(self, rt: "Runtime", fut=None, stats=None, tag=None, keys=None):
         self._rt = rt
         self._fut = fut  # repro.exec Future -> WaitStats, or None
         self._stats = stats  # pre-completed result (sim flush / empty cone)
         self._resolved = fut is None
         self._tag = tag  # flush id — the trace segment this ticket joins
+        # cone access footprint (reads, writes) from cone_access_keys;
+        # None = whole-graph flush (conflicts with everything)
+        self._keys = keys
+        self._exc: Optional[BaseException] = None
+        self._lock = threading.Lock()
 
     def done(self) -> bool:
         return self._resolved or self._fut.done()
+
+    def add_done_callback(self, fn) -> None:
+        """Run ``fn(self)`` when the drain resolves (immediately if it
+        already has).  Runs on the resolving executor thread — keep it
+        short and non-blocking."""
+        if self._fut is None:
+            fn(self)
+        else:
+            self._fut.add_done_callback(lambda _f: fn(self))
 
     def wait(self, timeout: Optional[float] = None):
         """Block until the drain completes.  Returns the flush's stats
         (a :class:`repro.exec.WaitStats` for async drains, a
         :class:`TimelineResult` for simulated ones, ``None`` when the
-        flush had nothing to drain); raises the drain's failure."""
-        if self._resolved:
-            return self._stats
-        # the main thread blocking on a drain is the third wait reason:
-        # a barrier (whole-graph flush, or joining a demand-driven cone)
+        flush had nothing to drain); raises the drain's failure (again,
+        on every call — a failed flush stays failed)."""
+        with self._lock:
+            if self._resolved:
+                if self._exc is not None:
+                    raise self._exc
+                return self._stats
+        # a thread blocking on a drain is the third wait reason: a
+        # barrier (whole-graph flush, or joining a demand-driven cone)
         col = _obs.CURRENT
         span = col is not None and not self._fut.done()
+        label = _wait_label()
         if span:
-            col.wait_start("main", "barrier")
+            col.wait_start(label, "barrier")
         try:
             res = self._fut.result(timeout)
         except TimeoutError:
             if span:
-                col.wait_end("main", "barrier", self._tag)
+                col.wait_end(label, "barrier", self._tag)
             raise  # still in flight — the ticket stays waitable
-        except BaseException:
+        except BaseException as exc:
             if span:
-                col.wait_end("main", "barrier", self._tag)
-            self._resolved = True
-            self._rt._ticket_failed(self)
+                col.wait_end(label, "barrier", self._tag)
+            with self._lock:
+                if not self._resolved:
+                    self._resolved = True
+                    self._exc = exc
+                    self._rt._ticket_failed(self)
             raise
         if span:
-            col.wait_end("main", "barrier", self._tag)
-        self._resolved = True
-        self._stats = res
-        self._rt._ticket_done(self, res)
+            col.wait_end(label, "barrier", self._tag)
+        with self._lock:
+            if not self._resolved:
+                self._resolved = True
+                self._stats = res
+                self._rt._ticket_done(self, res)
         return res
 
 
@@ -338,6 +379,9 @@ class Runtime:
         exec_channel: Optional[str] = None,
         exec_latency: Union[float, str] = 0.0,  # seconds, or "alpha"
         exec_progress_threads: int = 2,
+        exec_steal: bool = True,
+        exec_steal_threshold: int = 4,
+        exec_steal_latency: float = 1e-4,
         passes: Union[str, Sequence[str]] = "auto",
         sync: str = "auto",
         trace: Union[bool, str] = False,
@@ -388,6 +432,9 @@ class Runtime:
             exec_latency = resolve_latency(exec_latency, self.cluster)
         self.exec_latency = exec_latency
         self.exec_progress_threads = exec_progress_threads
+        self.exec_steal = exec_steal
+        self.exec_steal_threshold = exec_steal_threshold
+        self.exec_steal_latency = exec_steal_latency
         self.exec_stats = None  # WaitStats accumulated across async flushes
         # plan-stage pass pipeline (record -> PLAN -> execute); "auto"
         # resolves per flush backend: the measured executor gets the
@@ -417,6 +464,12 @@ class Runtime:
         self._exec_channel_obj = None
         self._exec_executor_obj = None
         self._tickets: list[FlushTicket] = []  # outstanding wait=False flushes
+        # _tickets is mutated from client threads (ticket bookkeeping runs
+        # on whichever thread resolves first under concurrent cone drains)
+        self._ticket_lock = threading.Lock()
+        # failures first observed by the reaper (no one waited the ticket
+        # yet); surfaced — in submission order — at the next full sync
+        self._deferred_errors: list[BaseException] = []
         self._closed = False
 
         self.deps = DependencySystem()
@@ -470,6 +523,9 @@ class Runtime:
             exec_channel=policy.resolved_channel,
             exec_latency=policy.latency,
             exec_progress_threads=policy.progress_threads,
+            exec_steal=getattr(policy, "steal", True),
+            exec_steal_threshold=getattr(policy, "steal_threshold", 4),
+            exec_steal_latency=getattr(policy, "steal_latency", 1e-4),
             passes=policy.passes,
             # resolved here so ExecutionPolicy.resolved_sync is the single
             # authority on what "auto" means for the config path
@@ -497,24 +553,37 @@ class Runtime:
                 self.flush()  # §5.6 trigger 3: end of program (a barrier)
         finally:
             _tls.runtime = None
-            self.close()
+            if exc_type is None:
+                self.close()  # surfaces any un-delivered drain failure
+            else:
+                try:
+                    self.close()
+                except Exception:
+                    # the body's exception is the one that matters;
+                    # resources were still released
+                    pass
         return False
 
     def close(self) -> None:
-        """Release executor resources: join any in-flight drain, stop the
-        persistent worker pool, and shut down the channel's progress
-        threads.  ``__exit__`` calls this on both the clean and the
-        exception path; double-close is a no-op."""
+        """Release executor resources: join *all* outstanding
+        ``FlushTicket``s in submission order, stop the persistent worker
+        pool, and shut down the channel's progress threads.  The first
+        executor exception encountered while joining — including
+        failures parked by the reaper that no waiter ever observed — is
+        re-raised *after* every resource is released: a close must not
+        silently drop a drain failure.  ``__exit__`` calls this on both
+        the clean and the exception path; double-close is a no-op."""
         if self._closed:
             return
+        err: Optional[BaseException] = None
         try:
             try:
                 self._sync_outstanding()
-            except Exception:
-                # a failed background drain already dropped its executor;
-                # the resource release below must still happen (the error
-                # surfaced — or will — at the wait()/readback site)
-                pass
+            except BaseException as exc:
+                # a pool-level failure already dropped its executor; the
+                # resource release below must still happen before the
+                # failure surfaces
+                err = exc
         finally:
             self._closed = True
             if self._exec_executor_obj is not None:
@@ -531,6 +600,8 @@ class Runtime:
                     from repro.obs.export import export_trace
 
                     export_trace(self.tracer, self.trace_path)
+        if err is not None:
+            raise err
 
     # -- array creation -------------------------------------------------------
     def _make_layout(self, shape, block_shape=None) -> Layout:
@@ -896,9 +967,15 @@ class Runtime:
         Python-side recording (under the simulated backend the drain is
         synchronous and the ticket comes back completed).
 
-        Any previously returned ticket is joined first — drains are
-        serialized; the overlap is between one drain and main-thread
-        recording, never between two drains.
+        ``flush`` is *re-entrant with respect to in-flight drains*: a
+        cone flush joins only the outstanding tickets whose access
+        footprints **conflict** with the new cone
+        (:func:`repro.core.graph.cones_conflict`); disjoint cones drain
+        concurrently on the shared worker pool.  A whole-graph flush
+        (``targets=None``) is a barrier — it joins every outstanding
+        ticket first.  Calls to ``flush`` itself must be externally
+        serialized (recording is single-threaded; the serve layer's
+        record lock guarantees this).
 
         The flush remains a three-stage pipeline: the (cone of the)
         *recorded* graph goes through the *plan* stage
@@ -907,17 +984,36 @@ class Runtime:
         scheduler or the async executor."""
         if self._closed:
             raise RuntimeError("Runtime is closed")
-        self._sync_outstanding()
+        from .graph import cone_access_keys
+
+        if targets is None:
+            self._sync_outstanding()  # a barrier: join every drain
+        else:
+            self._reap_tickets()  # fold finished drains' stats, keep going
         deps = self.deps
         dead = set(self._dead_bases)
         n_total = deps.n_pending
+        keys = None
         if targets is not None:
             cone_ops, rest_ops = producer_cone(
                 deps.pending_ops(), self._resolve_targets(targets)
             )
+            # even an empty cone must serialize against in-flight writes
+            # to the requested blocks: the caller is about to *read* them
+            keys = cone_access_keys(cone_ops)
             if not cone_ops:
+                read_keys = {
+                    k for k in self._resolve_targets(targets)
+                    if isinstance(k, tuple)
+                }
+                ids = {
+                    k for k in self._resolve_targets(targets)
+                    if not isinstance(k, tuple)
+                }
+                self._join_conflicting((read_keys, set()), base_ids=ids)
                 self._barrier_cleanup()
                 return None if wait else FlushTicket(self)
+            self._join_conflicting(keys)
             # a GC'd base only licenses dead-store elimination when no
             # *remainder* operation still touches it: the cone may hold a
             # dead temp's producer (pulled in as an anti-dependency) while
@@ -955,12 +1051,13 @@ class Runtime:
         self.flush_count += 1
         self._recorded_since_flush = self.deps.n_pending
         if self.flush_backend == "async":
-            ticket = self._flush_async(deps, hints, fid)
+            ticket = self._flush_async(deps, hints, fid, keys=keys)
             if wait:
                 res = ticket.wait()
                 self._barrier_cleanup()
                 return res
-            self._tickets.append(ticket)
+            with self._ticket_lock:
+                self._tickets.append(ticket)
             return ticket
         from repro.api.registry import get_scheduler
 
@@ -1008,14 +1105,14 @@ class Runtime:
                     ids.add((base.id, frag.block))
         return ids
 
-    def _flush_async(self, deps, hints, tag=None) -> FlushTicket:
+    def _flush_async(self, deps, hints, tag=None, keys=None) -> FlushTicket:
         """Submit ``deps`` to the persistent multi-worker executor
         (repro.exec) and return the in-flight ticket without joining."""
         executor = self._ensure_executor()
         fut = executor.submit(
             deps, batch_dispatch=bool(hints.get("batch_dispatch")), tag=tag
         )
-        return FlushTicket(self, fut=fut, tag=tag)
+        return FlushTicket(self, fut=fut, tag=tag, keys=keys)
 
     def _ensure_executor(self):
         from repro.exec import AsyncExecutor, make_backend, make_channel
@@ -1036,32 +1133,96 @@ class Runtime:
                 scratch=self.scratch,
                 backend=self._exec_backend_obj,
                 channel=self._exec_channel_obj,
+                steal=self.exec_steal,
+                steal_threshold=self.exec_steal_threshold,
+                steal_latency=self.exec_steal_latency,
             )
         return self._exec_executor_obj
 
     # -- ticket bookkeeping -------------------------------------------------
     def _sync_outstanding(self) -> None:
-        """Join every outstanding ``wait=False`` flush.  Drains are
-        serialized: a new flush (or a stats query) first waits for the
-        in-flight one, merging its stats."""
-        while self._tickets:
-            self._tickets[0].wait()
+        """Join *every* outstanding ``wait=False`` flush in submission
+        order, merging stats.  Raises the first failure — deferred
+        errors (observed by the reaper with no waiter) first, then the
+        first failing join — after all tickets resolved: a barrier must
+        never silently drop an executor exception."""
+        errors: list[BaseException]
+        with self._ticket_lock:
+            errors = self._deferred_errors
+            self._deferred_errors = []
+        while True:
+            with self._ticket_lock:
+                t = self._tickets[0] if self._tickets else None
+            if t is None:
+                break
+            try:
+                t.wait()
+            except BaseException as exc:
+                errors.append(exc)
+        if errors:
+            raise errors[0]
+
+    def _reap_tickets(self) -> None:
+        """Fold the stats of already-completed tickets without blocking
+        on the in-flight ones.  A completed-failed ticket nobody waited
+        yet parks its error in ``_deferred_errors`` — surfaced at the
+        next barrier (``_sync_outstanding``) — while the ticket itself
+        keeps re-raising to any late waiter."""
+        with self._ticket_lock:
+            done = [t for t in self._tickets if t.done()]
+        for t in done:
+            try:
+                t.wait()
+            except BaseException as exc:
+                with self._ticket_lock:
+                    self._deferred_errors.append(exc)
+
+    def _join_conflicting(self, keys, base_ids=None) -> None:
+        """Join every outstanding ticket whose cone footprint conflicts
+        with ``keys`` (``(reads, writes)``); tickets with no footprint
+        (whole-graph flushes) conflict with everything.  ``base_ids``
+        extends the read set to *all* blocks of the given bases (a
+        whole-base readback with nothing pending must still wait for
+        in-flight writers of any of its blocks)."""
+        from .graph import cones_conflict
+
+        def _conflicts(t: FlushTicket) -> bool:
+            if t._keys is None:
+                return True
+            if cones_conflict(t._keys, keys):
+                return True
+            if base_ids:
+                _, tw = t._keys
+                if any(k[0] in base_ids for k in tw if isinstance(k, tuple)):
+                    return True
+            return False
+
+        while True:
+            with self._ticket_lock:
+                t = next((t for t in self._tickets if _conflicts(t)), None)
+            if t is None:
+                return
+            t.wait()  # propagates the conflicting drain's failure
 
     def _ticket_done(self, ticket: FlushTicket, res) -> None:
-        if res is not None:
-            self._ensure_exec_stats().merge(res)
-        if ticket in self._tickets:
-            self._tickets.remove(ticket)
+        with self._ticket_lock:
+            if res is not None:
+                self._ensure_exec_stats().merge(res)
+            if ticket in self._tickets:
+                self._tickets.remove(ticket)
 
     def _ticket_failed(self, ticket: FlushTicket) -> None:
-        if ticket in self._tickets:
-            self._tickets.remove(ticket)
-        # the executor that failed mid-drain is not reusable; drop it so
-        # the next flush builds a fresh worker pool (channel + backend
-        # survive — jit caches and progress threads are unaffected)
+        with self._ticket_lock:
+            if ticket in self._tickets:
+                self._tickets.remove(ticket)
+        # a *pool-level* failure (worker thread death) poisons the
+        # executor: drop it so the next flush builds a fresh pool
+        # (channel + backend survive — jit caches and progress threads
+        # are unaffected).  Per-drain failures (an op raising) leave the
+        # pool healthy and concurrent drains running.
         ex = self._exec_executor_obj
-        self._exec_executor_obj = None
-        if ex is not None:
+        if ex is not None and getattr(ex, "_error", None) is not None:
+            self._exec_executor_obj = None
             ex.close()
 
     def _barrier_cleanup(self) -> None:
@@ -1071,7 +1232,10 @@ class Runtime:
         (remainder operations still reference scratch delivered by an
         earlier cone), so they are recycled only here; likewise block
         storage of dead bases may still be read by pending operations."""
-        if self._tickets or self.deps.n_pending:
+        with self._ticket_lock:
+            if self._tickets:
+                return
+        if self.deps.n_pending:
             return
         self.scratch.clear()
         self._xfer_cache.clear()

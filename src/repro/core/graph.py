@@ -32,6 +32,8 @@ __all__ = [
     "FullDAG",
     "regions_overlap",
     "producer_cone",
+    "cone_access_keys",
+    "cones_conflict",
 ]
 
 _op_counter = itertools.count()
@@ -163,6 +165,31 @@ def producer_cone(
     cone = [op for i, op in enumerate(ops) if marked[i]]
     rest = [op for i, op in enumerate(ops) if not marked[i]]
     return cone, rest
+
+
+def cone_access_keys(ops: list[OperationNode]) -> tuple[set, set]:
+    """The access footprint of a cone: ``(reads, writes)`` key sets at
+    the §5.7 access-key granularity (regions ignored — the same sound
+    over-approximation ``producer_cone`` uses).  Scratch keys
+    (``("s", sid)``) are included: two cones sharing a scratch buffer
+    must not drain concurrently."""
+    reads: set = set()
+    writes: set = set()
+    for op in ops:
+        for acc in op.accesses:
+            (writes if acc.write else reads).add(acc.key)
+    return reads, writes
+
+
+def cones_conflict(a: tuple[set, set], b: tuple[set, set]) -> bool:
+    """True when two cone footprints (from :func:`cone_access_keys`)
+    order-depend: one's writes touch the other's reads or writes.
+    Disjoint (non-conflicting) cones may drain concurrently in any
+    interleaving and still produce bit-identical block contents —
+    there is no access pair the dependency systems would have ordered."""
+    ar, aw = a
+    br, bw = b
+    return bool(aw & (br | bw)) or bool(bw & ar)
 
 
 def _reset_for_reinsert(op: OperationNode) -> None:

@@ -32,6 +32,7 @@ two-sided rendezvous messaging.
 """
 from __future__ import annotations
 
+import itertools
 import threading
 import time
 from typing import Optional
@@ -46,7 +47,7 @@ from repro.obs import collector as _obs
 
 from .channels import RendezvousDeadlock, RendezvousMailbox, make_channel
 from .futures import Future
-from .stats import WaitStats
+from .stats import WaitStats, WorkerStats
 from .workers import Worker
 
 __all__ = [
@@ -397,19 +398,71 @@ def make_backend(name, storage: dict, scratch: dict) -> ComputeBackend:
 # ---------------------------------------------------------------------------
 
 
+class _Drain:
+    """Bookkeeping for one in-flight drain on the shared pool.
+
+    Every pending op is stamped with its owning drain at submit time
+    (``op._drain``), so completion sweeps, per-drain stat accounting and
+    failure cleanup can route mixed worker batches back to the right
+    drain without a global registry lookup per op."""
+
+    __slots__ = (
+        "deps", "fut", "tag", "inflight", "ready_batch", "prev_hook",
+        "t0", "snap", "solo", "finished", "procs",
+        "comm_bytes", "n_comm_ops", "n_compute_ops", "n_handoffs",
+        "n_messages",
+    )
+
+    def __init__(self, deps: DependencySystem, tag, nworkers: int):
+        self.deps = deps
+        self.fut = Future()
+        self.tag = tag
+        self.inflight = 0
+        self.ready_batch: list[OperationNode] = []
+        self.prev_hook = None
+        self.t0 = 0.0
+        self.snap: Optional[dict] = None
+        # True while this drain has had the pool to itself for its whole
+        # lifetime: its stats can then be the exact lifetime-delta the
+        # serialized executor reported (including worker idle time)
+        self.solo = True
+        self.finished = False
+        self.procs = [WorkerStats() for _ in range(nworkers)]
+        self.comm_bytes = 0
+        self.n_comm_ops = 0
+        self.n_compute_ops = 0
+        self.n_handoffs = 0
+        self.n_messages = 0
+
+
 class AsyncExecutor:
-    """Drains DependencySystems on a persistent worker pool + transfer
-    channels.
+    """Drains DependencySystems on a persistent work-stealing worker
+    pool + transfer channels.
 
     The executor is *persistent*: :meth:`submit` hands it a recorded
     graph (typically one dependency cone of a demand-driven flush) and
     returns a :class:`~repro.exec.futures.Future` that resolves — from
     the completing worker/progress thread — with that drain's
-    :class:`WaitStats` delta.  The submitting thread keeps running
-    (recording more operations) while the drain proceeds; drains are
-    serialized (one in flight at a time), and the worker threads park on
-    their empty queues between drains instead of being torn down.
-    :meth:`run` is the blocking convenience (``submit().result()``).
+    :class:`WaitStats`.  The submitting thread keeps running (recording
+    more operations) while the drain proceeds, and **multiple drains
+    may be in flight concurrently**: each drain carries its own
+    dependency system, in-flight counter and per-worker accounting, and
+    completion sweeps route mixed batches back per drain.  The caller
+    is responsible for only submitting graphs whose access footprints
+    don't conflict with in-flight drains (``Runtime.flush`` joins
+    conflicting tickets first — see ``repro.core.graph.cones_conflict``);
+    ops *within* one submitted graph are ordered by its dependency
+    system as always.  :meth:`run` is the blocking convenience
+    (``submit().result()``).
+
+    Work stealing: a worker whose queue runs dry asks :meth:`_steal_for`
+    for work before parking.  Victim selection is longest-queue-first
+    gated by the latency-aware threshold of arXiv 1805.01768 — steal
+    only when the victim holds at least ``steal_threshold`` ops *and*
+    the expected work moved (half the victim's queue × the EWMA task
+    grain) exceeds ``steal_latency``, the measured cost of a steal
+    round trip.  Otherwise a slow cone's tail would be diced into
+    steals that cost more than they move.
 
     With ``batch_dispatch=True`` (set by the ``"batch"`` plan pass) the
     completion sweep groups newly-ready compute ops per worker and
@@ -428,6 +481,9 @@ class AsyncExecutor:
         latency: float = 0.0,
         progress_threads: int = 2,
         batch_dispatch: bool = False,
+        steal: bool = True,
+        steal_threshold: int = 4,
+        steal_latency: float = 1e-4,
     ):
         self.nworkers = nworkers
         self.backend = make_backend(backend, storage, scratch)
@@ -439,45 +495,101 @@ class AsyncExecutor:
         )
         self.mode = "blocking-channel" if self.channel.blocking else "async"
         self.batch_dispatch = batch_dispatch
+        self.steal = steal and nworkers > 1
+        self.steal_threshold = max(2, steal_threshold)
+        self.steal_latency = max(0.0, steal_latency)
+        # EWMA of per-op compute grain (seconds) — the τ in the 1805.01768
+        # gate "move only if n·τ ≥ steal latency".  Starts at the steal
+        # latency so the first steals are allowed until measured.
+        self._grain_ewma = max(self.steal_latency, 1e-6)
         self.workers = [
-            Worker(r, self._run_batch, self._record_error, batch=batch_dispatch)
+            Worker(
+                r,
+                self._run_batch,
+                self._record_error,
+                batch=batch_dispatch,
+                steal_fn=self._steal_for if self.steal else None,
+            )
             for r in range(nworkers)
         ]
-        self._glock = threading.Lock()  # guards deps + inflight accounting
-        self._deps: Optional[DependencySystem] = None
-        self._inflight = 0
-        self._ready_batch: list[OperationNode] = []
-        self._drain_fut: Optional[Future] = None
-        self._prev_hook = None
-        self._drain_tag = None  # flush id of the active drain (trace segment)
-        self._t0 = 0.0
-        self._snap: Optional[dict] = None
+        self._glock = threading.Lock()  # guards drains + counters
+        self._drains: dict[int, _Drain] = {}  # id(drain) -> drain
+        self._anon_tags = itertools.count()
         self._error: Optional[BaseException] = None
         self._workers_started = False
         self._closed = False
-        # lifetime totals; per-drain stats are deltas against a submit-time
-        # snapshot
+        # lifetime totals (executor introspection; per-drain stats are
+        # accounted per-op on each _Drain)
         self.comm_bytes = 0
         self.n_comm_ops = 0
         self.n_compute_ops = 0
         self.n_handoffs = 0
 
-    # -- error path ------------------------------------------------------
+    # -- error paths -------------------------------------------------------
     def _record_error(self, exc: BaseException) -> None:
-        self._finish_drain(exc)
+        """Pool-level failure (worker thread death, internal error): the
+        pool is no longer trustworthy — poison it and fail every active
+        drain."""
+        with self._glock:
+            if self._error is None:
+                self._error = exc
+            drains = list(self._drains.values())
+        for d in drains:
+            self._finish_drain(d, exc)
+
+    def _fail_drain(self, drain: _Drain, exc: BaseException) -> None:
+        """Per-op failure: only the owning drain dies; the pool (and any
+        concurrent drains) keeps running."""
+        self._finish_drain(drain, exc)
 
     # -- transfer execution (runs on progress threads / workers) ----------
     def _exec_comm(self, op: OperationNode) -> None:
         execute_payload(op.payload, self.backend.storage, self.backend.scratch)
 
+    # -- work stealing -----------------------------------------------------
+    def _steal_for(self, thief: Worker) -> Optional[list[OperationNode]]:
+        """Steal policy, run by an idle worker before parking: pick the
+        longest queue holding at least ``steal_threshold`` ops, take
+        half its tail (one op unbatched), but only when the expected
+        work moved clears the steal-latency gate (arXiv 1805.01768)."""
+        if self._closed or self._error is not None:
+            return None
+        victim = None
+        vlen = self.steal_threshold - 1
+        for w in self.workers:
+            if w is thief:
+                continue
+            n = w.qlen()  # racy heuristic read; steal_from re-checks
+            if n > vlen:
+                victim, vlen = w, n
+        if victim is None:
+            return None
+        n = max(1, vlen // 2) if self.batch_dispatch else 1
+        # latency-aware gate: moving n ops pays only when their expected
+        # grain amortizes the steal round trip
+        if n * self._grain_ewma < self.steal_latency:
+            return None
+        return victim.steal_from(n) or None
+
+    def _wake_thieves(self, loaded_ranks) -> None:
+        """After a dispatch left some queue at/above the steal threshold,
+        nudge parked empty-queue workers to re-run the steal policy."""
+        for w in self.workers:
+            if w.rank not in loaded_ranks and w.qlen() == 0:
+                w.wake()
+
     # -- dispatch ---------------------------------------------------------
-    def _count_op(self, op: OperationNode) -> None:
+    def _count_op(self, op: OperationNode, drain: _Drain) -> None:
         """Op accounting — call with _glock held (many threads dispatch)."""
         if op.kind == COMM:
             self.n_comm_ops += 1
             self.comm_bytes += op.nbytes
+            drain.n_comm_ops += 1
+            drain.comm_bytes += op.nbytes
+            drain.n_messages += 1  # every comm op is posted exactly once
         else:
             self.n_compute_ops += 1
+            drain.n_compute_ops += 1
 
     def _dispatch_batch(self, ops: list[OperationNode]) -> None:
         """Route a sweep of ready ops.  COMM on the async channel is
@@ -505,6 +617,7 @@ class AsyncExecutor:
             for op, fut in zip(async_comm, futs):
                 fut.add_done_callback(self._comm_callback(op))
         handoffs = 0
+        heavy = False
         for rank, group in per_worker.items():
             if self.batch_dispatch:
                 self.workers[rank].push_batch(group)
@@ -513,15 +626,25 @@ class AsyncExecutor:
                 for op in group:
                     self.workers[rank].push(op)
                     handoffs += 1
+            heavy = heavy or len(group) >= self.steal_threshold
         if handoffs:
             with self._glock:
                 self.n_handoffs += handoffs
+                for rank, group in per_worker.items():
+                    seen = set()
+                    for op in group:
+                        d = op._drain
+                        if id(d) not in seen:
+                            seen.add(id(d))
+                            d.n_handoffs += 1
+        if self.steal and heavy:
+            self._wake_thieves(set(per_worker))
 
     def _comm_callback(self, op: OperationNode):
         def cb(fut) -> None:
             exc = fut.exception()
             if exc is not None:
-                self._record_error(exc)
+                self._fail_drain(op._drain, exc)
             else:
                 self._ops_done((op,))
 
@@ -529,14 +652,22 @@ class AsyncExecutor:
 
     def _run_batch(self, ops: list[OperationNode], worker: Worker) -> None:
         """Execute one worker batch (comm-first order already applied by
-        the pop) and complete it through a single dependency sweep."""
+        the pop) and complete it through a single dependency sweep.  A
+        batch may mix ops from several concurrent drains; per-op stats
+        are binned into each op's own drain, and a failing op kills only
+        its drain — the rest of the batch still executes."""
         completed: list[OperationNode] = []
         col = _obs.CURRENT
+        rank = worker.rank
         for op in ops:
+            drain: _Drain = op._drain
+            if drain.finished:
+                continue  # drain failed elsewhere: its leftovers are void
+            dstats = drain.procs[rank]
             if op.kind == COMM:  # blocking channel only: inline transfer
                 t0 = time.perf_counter()  # wall: the blocking IS the waiting
                 if col is not None:
-                    col.wait_start(worker.rank, "channel")
+                    col.wait_start(rank, "channel")
                 fut = self.channel.post(op, self._exec_comm)
                 try:
                     # wait for resolution: the built-in BlockingChannel
@@ -545,41 +676,49 @@ class AsyncExecutor:
                     # thread — the op must not complete before its data
                     fut.result()
                 except BaseException as exc:
-                    worker.stats.comm_busy += time.perf_counter() - t0
+                    dt = time.perf_counter() - t0
+                    worker.stats.comm_busy += dt
                     worker.stats.n_comm += 1
+                    dstats.comm_busy += dt
+                    dstats.n_comm += 1
                     if col is not None:
-                        col.wait_end(worker.rank, "channel", op.uid)
-                    if completed:
-                        self._ops_done(completed)
-                    self._record_error(exc)
-                    return
-                worker.stats.comm_busy += time.perf_counter() - t0
+                        col.wait_end(rank, "channel", op.uid)
+                    self._fail_drain(drain, exc)
+                    continue
+                dt = time.perf_counter() - t0
+                worker.stats.comm_busy += dt
                 worker.stats.n_comm += 1
+                dstats.comm_busy += dt
+                dstats.n_comm += 1
                 if col is not None:
-                    col.wait_end(worker.rank, "channel", op.uid)
+                    col.wait_end(rank, "channel", op.uid)
                 completed.append(op)
                 continue
             # compute is accounted in per-thread CPU time: wall durations on
             # an oversubscribed machine include GIL/scheduler preemption,
             # which would inflate "busy" exactly when contention is worst
             if col is not None:
-                col.compute_start(op.uid, worker.rank)
+                col.compute_start(op.uid, rank)
             t0 = time.thread_time()
             try:
                 self.backend.execute(op)
             except BaseException as exc:
                 if col is not None:
-                    col.compute_end(op.uid, worker.rank)
-                if completed:
-                    self._ops_done(completed)
-                self._record_error(exc)
-                return
-            worker.stats.compute_busy += time.thread_time() - t0
+                    col.compute_end(op.uid, rank)
+                self._fail_drain(drain, exc)
+                continue
+            dt = time.thread_time() - t0
+            worker.stats.compute_busy += dt
             worker.stats.n_compute += 1
+            dstats.compute_busy += dt
+            dstats.n_compute += 1
+            # unlocked EWMA: a heuristic input for the steal gate only
+            self._grain_ewma += 0.2 * (dt - self._grain_ewma)
             if col is not None:
-                col.compute_end(op.uid, worker.rank)
+                col.compute_end(op.uid, rank)
             completed.append(op)
-        self._ops_done(completed)
+        if completed:
+            self._ops_done(completed)
 
     # -- completion (worker batches and channel callbacks land here) -------
     def _ops_done(self, ops) -> None:
@@ -592,39 +731,47 @@ class AsyncExecutor:
             self._record_error(internal)
 
     def _ops_done_inner(self, ops) -> None:
-        finished = deadlocked = False
         col = _obs.CURRENT
+        to_dispatch: list[OperationNode] = []
+        finishing: list[tuple[_Drain, Optional[BaseException]]] = []
         with self._glock:
-            if self._deps is None:  # drain already finalized
-                return
-            deps = self._deps
-            self._inflight -= len(ops)
-            ready_pairs = [] if col is not None else None
+            groups: dict[int, list[OperationNode]] = {}
             for op in ops:
-                # complete() returns the ops this completion made ready —
-                # the causality edge wait attribution charges waits along
-                made_ready = deps.complete(op)  # on_ready -> _ready_batch
-                if ready_pairs is not None:
-                    for nxt in made_ready:
-                        ready_pairs.append((nxt.uid, op.uid))
-            if ready_pairs:
-                col.ready_many(ready_pairs)
-            newly, self._ready_batch = self._ready_batch, []
-            self._inflight += len(newly)
+                groups.setdefault(id(op._drain), []).append(op)
+            for key, dops in groups.items():
+                drain = self._drains.get(key)
+                if drain is None or drain.finished:
+                    continue  # late completions of an already-failed drain
+                deps = drain.deps
+                drain.inflight -= len(dops)
+                ready_pairs = [] if col is not None else None
+                for op in dops:
+                    # complete() returns the ops this completion made ready
+                    # — the causality edge wait attribution charges along
+                    made_ready = deps.complete(op)  # on_ready -> ready_batch
+                    if ready_pairs is not None:
+                        for nxt in made_ready:
+                            ready_pairs.append((nxt.uid, op.uid))
+                if ready_pairs:
+                    col.ready_many(ready_pairs)
+                newly = drain.ready_batch
+                drain.ready_batch = []
+                drain.inflight += len(newly)
+                for nxt in newly:
+                    self._count_op(nxt, drain)
+                to_dispatch.extend(newly)
+                if drain.inflight == 0:
+                    finishing.append(
+                        (drain, None if deps.done else self._deadlock_error(deps))
+                    )
             if col is not None:
-                col.counter("ops-inflight", self._inflight)
-            for nxt in newly:
-                self._count_op(nxt)
-            if self._inflight == 0:
-                if deps.done:
-                    finished = True
-                else:
-                    deadlocked = True
-        self._dispatch_batch(newly)
-        if finished:
-            self._finish_drain()
-        elif deadlocked:
-            self._finish_drain(self._deadlock_error(deps))
+                col.counter(
+                    "ops-inflight",
+                    sum(d.inflight for d in self._drains.values()),
+                )
+        self._dispatch_batch(to_dispatch)
+        for drain, exc in finishing:
+            self._finish_drain(drain, exc)
 
     def _deadlock_error(self, deps: Optional[DependencySystem]) -> DeadlockError:
         stuck = deps.pending_ops() if deps is not None else []
@@ -661,35 +808,59 @@ class AsyncExecutor:
             n_messages=getattr(self.channel, "n_posted", 0) - snap["n_posted"],
         )
 
-    def _finish_drain(self, exc: Optional[BaseException] = None) -> None:
-        """Finalize the active drain exactly once: detach the graph,
-        restore its hook, and resolve the drain future — with the
-        measured WaitStats delta, or with ``exc``.  Runs on whichever
-        thread completes (or kills) the last in-flight operation."""
+    def _drain_stats(self, drain: _Drain, elapsed: float) -> WaitStats:
+        """Per-drain WaitStats.  A drain that had the pool to itself its
+        whole lifetime reports the exact lifetime-delta the serialized
+        executor reported (including worker idle time between its ops);
+        an overlapped drain reports its own per-op accounting — worker
+        idle/wakeups are shared-pool quantities with no meaningful
+        per-drain split, so they stay zero and ``wait_fraction``
+        (compute-vs-elapsed) remains well-defined per tenant."""
+        if drain.solo:
+            return self._stats_since(drain.snap, elapsed)
+        return WaitStats(
+            mode=self.mode,
+            nworkers=self.nworkers,
+            elapsed=elapsed,
+            procs=drain.procs,
+            comm_bytes=drain.comm_bytes,
+            n_comm_ops=drain.n_comm_ops,
+            n_compute_ops=drain.n_compute_ops,
+            seq_time=sum(p.compute_busy for p in drain.procs),
+            n_flushes=1,
+            n_handoffs=drain.n_handoffs,
+            n_messages=drain.n_messages,
+        )
+
+    def _finish_drain(
+        self, drain: _Drain, exc: Optional[BaseException] = None
+    ) -> None:
+        """Finalize one drain exactly once: detach its graph, restore its
+        hook, and resolve its future — with the measured WaitStats, or
+        with ``exc``.  Runs on whichever thread completes (or kills) the
+        drain's last in-flight operation."""
         with self._glock:
-            if self._drain_fut is None:  # no active drain (late error)
-                if exc is not None and self._error is None:
-                    self._error = exc
+            if drain.finished:
                 return
-            deps, self._deps = self._deps, None
-            fut, self._drain_fut = self._drain_fut, None
-            tag, self._drain_tag = self._drain_tag, None
-            self._ready_batch = []
-            # a failed drain may leave the erroring op (and friends)
-            # uncounted; late completions of in-flight ops return early on
-            # _deps None without decrementing, so zero the counter here or
-            # the next drain on this executor could never reach 0
-            self._inflight = 0
-        if deps is not None:
-            deps.on_ready = self._prev_hook
+            drain.finished = True
+            self._drains.pop(id(drain), None)
+            drain.ready_batch = []
+            drain.inflight = 0
+        if drain.deps is not None:
+            drain.deps.on_ready = drain.prev_hook
+        if exc is not None:
+            # a failed drain's queued-but-unexecuted leftovers must not
+            # run later against state a subsequent flush re-plans
+            for w in self.workers:
+                w.discard(lambda op: getattr(op, "_drain", None) is drain)
         col = _obs.CURRENT
         if col is not None:
-            col.drain_end(tag)
-        elapsed = time.perf_counter() - self._t0
+            col.drain_end(drain.tag)
+        elapsed = time.perf_counter() - drain.t0
         if exc is not None:
-            fut.set_exception(exc)
+            drain.fut.set_exception(exc)
         else:
-            fut.set_result(self._stats_since(self._snap, elapsed))
+            drain.fut.set_result(self._drain_stats(drain, elapsed))
 
     # -- main entry -------------------------------------------------------
     def submit(
@@ -700,38 +871,51 @@ class AsyncExecutor:
     ) -> Future:
         """Start draining ``deps`` and return a Future resolving to the
         drain's :class:`WaitStats` (or raising its failure).  Returns
-        immediately; the caller keeps the main thread.  One drain may be
-        in flight at a time — submit again only after the previous
-        future resolved."""
+        immediately; the caller keeps its thread.  May be called again
+        while prior drains are in flight — concurrent drains share the
+        worker pool; the caller guarantees the submitted graphs'
+        access footprints don't conflict (``Runtime.flush`` serializes
+        conflicting cones by joining their tickets first)."""
         if self._closed:
             raise RuntimeError("AsyncExecutor is closed")
         if self._error is not None:
             raise self._error
-        if self._drain_fut is not None:
-            raise RuntimeError(
-                "a drain is already in flight; wait on its future first"
-            )
-        if batch_dispatch is not None and batch_dispatch != self.batch_dispatch:
-            self.batch_dispatch = batch_dispatch
-            for w in self.workers:
-                w.set_batch(batch_dispatch)
-        fut = Future()
-        self._prev_hook = deps.on_ready
-        # late-bound: _ops_done swaps _ready_batch for a fresh list per sweep
-        deps.on_ready = lambda op: self._ready_batch.append(op)
-        self._snap = self._snapshot()
-        self._t0 = time.perf_counter()
-        with self._glock:
-            self._deps = deps
-            self._drain_fut = fut
-            self._drain_tag = tag
         col = _obs.CURRENT
+        pending = deps.pending_ops()
+        with self._glock:
+            if batch_dispatch is not None and batch_dispatch != self.batch_dispatch:
+                if self._drains:
+                    raise RuntimeError(
+                        "cannot switch dispatch granularity while drains "
+                        "are in flight"
+                    )
+                self.batch_dispatch = batch_dispatch
+                for w in self.workers:
+                    w.set_batch(batch_dispatch)
+            if tag is None:
+                # drains need a distinguishable id: trace segments of
+                # concurrent drains pair begin/end events by tag
+                tag = f"anon-{next(self._anon_tags)}"
+            drain = _Drain(deps, tag, self.nworkers)
+            drain.prev_hook = deps.on_ready
+            for op in pending:
+                op._drain = drain
+            if self._drains:
+                drain.solo = False
+                for d in self._drains.values():
+                    d.solo = False
+            drain.snap = self._snapshot()
+            drain.t0 = time.perf_counter()
+            self._drains[id(drain)] = drain
+            if not self._workers_started:
+                self._workers_started = True
+                for w in self.workers:
+                    w.start()
+        # late-bound: _ops_done swaps ready_batch for a fresh list per sweep
+        deps.on_ready = lambda op: drain.ready_batch.append(op)
         if col is not None:
             col.drain_begin(tag, deps.n_pending, self.nworkers)
-        if not self._workers_started:
-            self._workers_started = True
-            for w in self.workers:
-                w.start()
+            col.drain_ops(tag, [op.uid for op in pending])
         for w in self.workers:
             w.drain_started()  # parked-between-drains time is not idle
         # initial dispatch: everything recorded ready before we attached
@@ -742,16 +926,21 @@ class AsyncExecutor:
                 if op is None:
                     break
                 initial.append(op)
-                self._count_op(op)
-            self._inflight += len(initial)
+                self._count_op(op, drain)
+            drain.inflight += len(initial)
         if not initial:
             if deps.done:
-                self._finish_drain()  # empty graph: resolve with empty delta
+                self._finish_drain(drain)  # empty graph: empty stats
             else:
-                self._finish_drain(self._deadlock_error(deps))
-            return fut
+                self._finish_drain(drain, self._deadlock_error(deps))
+            return drain.fut
         self._dispatch_batch(initial)
-        return fut
+        return drain.fut
+
+    @property
+    def n_active_drains(self) -> int:
+        with self._glock:
+            return len(self._drains)
 
     def run(self, deps: DependencySystem) -> WaitStats:
         """Drain ``deps`` to completion; returns the measured WaitStats
@@ -761,10 +950,17 @@ class AsyncExecutor:
 
     def close(self) -> None:
         """Stop the worker pool and (if owned) the channel.  Idempotent —
-        a double close is a no-op."""
+        a double close is a no-op.  Any still-active drain is failed
+        (the owner should have joined its tickets first)."""
         if self._closed:
             return
         self._closed = True
+        with self._glock:
+            drains = list(self._drains.values())
+        for d in drains:
+            self._finish_drain(
+                d, RuntimeError("AsyncExecutor closed with a drain in flight")
+            )
         for w in self.workers:
             w.stop()
         if self._workers_started:

@@ -30,6 +30,8 @@ class WorkerStats:
     n_compute: int = 0
     n_comm: int = 0
     n_wakeups: int = 0  # queue pops (one per batch under batched dispatch)
+    n_steals: int = 0  # successful steal attempts (batches taken)
+    n_stolen: int = 0  # ops obtained by stealing from loaded peers
 
     def absorb(self, other: "WorkerStats") -> None:
         self.compute_busy += other.compute_busy
@@ -38,6 +40,8 @@ class WorkerStats:
         self.n_compute += other.n_compute
         self.n_comm += other.n_comm
         self.n_wakeups += other.n_wakeups
+        self.n_steals += other.n_steals
+        self.n_stolen += other.n_stolen
 
     def snapshot(self) -> "WorkerStats":
         """Value copy, taken by the persistent executor at submit time so
@@ -49,6 +53,8 @@ class WorkerStats:
             n_compute=self.n_compute,
             n_comm=self.n_comm,
             n_wakeups=self.n_wakeups,
+            n_steals=self.n_steals,
+            n_stolen=self.n_stolen,
         )
 
     def since(self, base: "WorkerStats") -> "WorkerStats":
@@ -60,6 +66,8 @@ class WorkerStats:
             n_compute=self.n_compute - base.n_compute,
             n_comm=self.n_comm - base.n_comm,
             n_wakeups=self.n_wakeups - base.n_wakeups,
+            n_steals=self.n_steals - base.n_steals,
+            n_stolen=self.n_stolen - base.n_stolen,
         )
 
 
@@ -146,6 +154,16 @@ class WaitStats:
         for mine, theirs in zip(self.procs, other.procs):
             mine.absorb(theirs)
         return self
+
+    @property
+    def n_steals(self) -> int:
+        """Successful work-steal batches across all workers."""
+        return sum(p.n_steals for p in self.procs)
+
+    @property
+    def n_stolen(self) -> int:
+        """Ops moved between workers by stealing."""
+        return sum(p.n_stolen for p in self.procs)
 
     @property
     def ops_per_sec(self) -> float:

@@ -1,71 +1,110 @@
-"""Serving driver: batched prefill + decode loop.
+"""Serving driver: synthetic tenants against one shared runtime.
 
-    PYTHONPATH=src python -m repro.launch.serve --arch granite-3-8b \
-        --reduced --batch 4 --prompt-len 32 --gen 32
+    PYTHONPATH=src python -m repro.launch.serve --tenants 2 --requests 8
+
+Each tenant is a client thread submitting halo-exchange stencil
+requests to a :class:`repro.serve.Server`.  All tenants share one
+runtime and one work-stealing worker pool; their request cones are
+disjoint, so they drain concurrently — the demo prints each tenant's
+measured wait%, request quantiles (p50/p95/p99), and the admission
+counters via :func:`repro.format_stats`.
 """
 from __future__ import annotations
 
 import argparse
+import threading
 import time
 
-import jax
-import jax.numpy as jnp
+import numpy as np
 
-from repro.configs import get_config, get_reduced
-from repro.models import decode_step, init_params, prefill
 
-from .steps import make_serve_step
+def tenant_workload(seed: int, n: int):
+    """One tenant's request: a 5-point stencil step over a private
+    array, plus its NumPy closed form for verification."""
+    import repro
+
+    host = np.random.default_rng(seed).standard_normal((n, n))
+
+    def fn():
+        a = repro.array(host)
+        b = (np.roll(a, 1, axis=0) + np.roll(a, -1, axis=0)
+             + np.roll(a, 1, axis=1) + np.roll(a, -1, axis=1)) * 0.25
+        return b - a * 0.5
+
+    expect = (np.roll(host, 1, axis=0) + np.roll(host, -1, axis=0)
+              + np.roll(host, 1, axis=1) + np.roll(host, -1, axis=1)) * 0.25 \
+        - host * 0.5
+    return fn, expect
 
 
 def serve(
-    arch: str,
+    tenants: int = 2,
+    requests: int = 8,
     *,
-    reduced: bool = True,
-    batch: int = 4,
-    prompt_len: int = 32,
-    gen: int = 32,
+    nprocs: int = 4,
+    block: int = 16,
+    n: int = 32,
+    latency: float = 5e-3,
+    max_inflight: int = 8,
     seed: int = 0,
 ):
-    cfg = get_reduced(arch) if reduced else get_config(arch)
-    params = init_params(cfg, jax.random.PRNGKey(0))
-    ks = jax.random.split(jax.random.PRNGKey(seed), 3)
-    req = {"tokens": jax.random.randint(ks[0], (batch, prompt_len), 0, cfg.vocab_size)}
-    if cfg.enc_dec:
-        req["enc_frames"] = jax.random.normal(ks[1], (batch, cfg.enc_seq, cfg.d_model))
-    if cfg.n_img_tokens:
-        req["img_emb"] = jax.random.normal(ks[2], (batch, cfg.n_img_tokens, cfg.d_model))
+    """Run ``tenants`` concurrent client threads, ``requests`` stencil
+    requests each, against one shared Server; verifies every result and
+    returns ``{tenant: TenantStats}``."""
+    import repro
 
-    t0 = time.time()
-    max_len = prompt_len + gen + (cfg.n_img_tokens or 0)
-    last, state = prefill(cfg, params, req, max_len=max_len)
-    t_prefill = time.time() - t0
-    toks = jnp.argmax(last, axis=-1).astype(jnp.int32)
+    srv = repro.Server(
+        nprocs=nprocs,
+        block_size=block,
+        latency=latency,
+        max_inflight=max_inflight,
+        max_queue=max(tenants, 8),
+    )
+    mismatches = []
 
-    step = jax.jit(make_serve_step(cfg))
-    out = [toks]
-    t0 = time.time()
-    for _ in range(gen - 1):
-        toks, state = step(params, state, toks)
-        out.append(toks)
-    seq = jnp.stack(out, axis=1)
-    dt = time.time() - t0
-    print(f"[serve] {arch}: prefill {batch}x{prompt_len} in {t_prefill*1e3:.0f}ms; "
-          f"decoded {batch}x{gen} in {dt*1e3:.0f}ms "
-          f"({batch * (gen-1) / max(dt, 1e-9):.1f} tok/s)")
-    assert bool(jnp.isfinite(last).all())
-    return seq
+    def client(name: str, widx: int):
+        fn, expect = tenant_workload(seed + widx, n)
+        sess = srv.session(name)
+        for _ in range(requests):
+            got = sess.request(fn).result()
+            if not np.array_equal(got, expect):
+                mismatches.append(name)
+
+    t0 = time.perf_counter()
+    with srv:
+        threads = [
+            threading.Thread(target=client, args=(f"tenant-{i}", i))
+            for i in range(tenants)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        elapsed = time.perf_counter() - t0
+        assert not mismatches, f"result mismatch for {sorted(set(mismatches))}"
+        print(srv.format_stats())
+        adm = srv.admission
+        print(f"[serve] {tenants} tenants x {requests} requests in "
+              f"{elapsed * 1e3:.0f} ms "
+              f"({tenants * requests / elapsed:.1f} req/s); admission: "
+              f"{adm.n_admitted} admitted, {adm.n_rejected} rejected, "
+              f"peak inflight {adm.peak_inflight}")
+        return srv.stats()
 
 
 def main():
     ap = argparse.ArgumentParser()
-    ap.add_argument("--arch", required=True)
-    ap.add_argument("--reduced", action="store_true")
-    ap.add_argument("--batch", type=int, default=4)
-    ap.add_argument("--prompt-len", type=int, default=32)
-    ap.add_argument("--gen", type=int, default=32)
+    ap.add_argument("--tenants", type=int, default=2)
+    ap.add_argument("--requests", type=int, default=8,
+                    help="requests per tenant")
+    ap.add_argument("--nprocs", type=int, default=4)
+    ap.add_argument("--block", type=int, default=16)
+    ap.add_argument("--n", type=int, default=32)
+    ap.add_argument("--latency", type=float, default=5e-3)
+    ap.add_argument("--max-inflight", type=int, default=8)
     a = ap.parse_args()
-    serve(a.arch, reduced=a.reduced, batch=a.batch,
-          prompt_len=a.prompt_len, gen=a.gen)
+    serve(a.tenants, a.requests, nprocs=a.nprocs, block=a.block, n=a.n,
+          latency=a.latency, max_inflight=a.max_inflight)
 
 
 if __name__ == "__main__":

@@ -208,7 +208,18 @@ def attribution(collector, k: Optional[int] = None) -> AttributionReport:
         spans.append(WaitSpan(worker, reason, t0, last_ts, None))
     for tag, t0 in seg_open.items():
         segments.append((t0, last_ts))
+    # merge overlapping drain segments into a disjoint union: concurrent
+    # cone drains overlap in time, and clipping against raw overlapping
+    # intervals would double-charge every span under them (and inflate
+    # the traced elapsed, deflating wait_fraction)
     segments.sort()
+    merged: list = []
+    for s0, s1 in segments:
+        if merged and s0 <= merged[-1][1]:
+            merged[-1][1] = max(merged[-1][1], s1)
+        else:
+            merged.append([s0, s1])
+    segments = [(s0, s1) for s0, s1 in merged]
 
     int_workers = {w for w in comp_open if isinstance(w, int)} | {
         s.worker for s in spans if isinstance(s.worker, int)

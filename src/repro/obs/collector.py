@@ -85,6 +85,10 @@ class TraceCollector:
         self.t0 = time.perf_counter()
         self.events: deque = deque(maxlen=capacity)
         self.ops: dict = {}  # uid -> (kind, label, nbytes)
+        # uid -> flush/drain tag: with concurrent drains, per-op events
+        # interleave across flushes; this registry lets export/attribution
+        # route every op back to the drain segment that owns it
+        self.flush_of: dict = {}
         self.n_emitted = 0
 
     # -- introspection ----------------------------------------------------
@@ -150,6 +154,14 @@ class TraceCollector:
         self.events.append(
             (time.perf_counter() - self.t0, "drain-end", tag, None, None)
         )
+
+    def drain_ops(self, tag, uids) -> None:
+        """Register every op of a submitted drain under its flush/drain
+        tag (no event emitted — pure registry, used to keep traces
+        structurally valid when drains interleave)."""
+        flush_of = self.flush_of
+        for uid in uids:
+            flush_of[uid] = tag
 
     # -- worker queues ----------------------------------------------------
     def enqueued(self, uid, worker, qdepth: int) -> None:

@@ -84,6 +84,19 @@ def export_trace(collector, path: Optional[str] = None, full: bool = False) -> d
     delivered: dict = {}  # msg uid -> (ts, chan)
     cause: dict = {}  # uid -> cause uid
     posted: set = set()  # msg uids whose "b" survived the ring buffer
+    open_drains: set = set()  # drain tags whose "b" survived the buffer
+    flush_of = getattr(collector, "flush_of", {})  # uid -> drain tag
+
+    # non-worker wait spans (main thread, serve client threads) render as
+    # enumerated rows on the runtime process; "main" is always tid 0
+    runtime_tids: dict = {"main": 0}
+
+    def runtime_tid(label) -> int:
+        tid = runtime_tids.get(label)
+        if tid is None:
+            tid = len(runtime_tids)
+            runtime_tids[label] = tid
+        return tid
 
     for ts, et, uid, worker, extra in events:
         t = _us(ts)
@@ -96,6 +109,9 @@ def export_trace(collector, path: Optional[str] = None, full: bool = False) -> d
             if opened is not None:
                 worker_tids.add(worker)
                 args = {"uid": uid}
+                fid = flush_of.get(uid)
+                if fid is not None:
+                    args["flush"] = fid
                 if isinstance(extra, float) and isinstance(opened[2], float):
                     # CPU time of the slice; the wall extent additionally
                     # contains GIL/scheduler preemption
@@ -110,11 +126,11 @@ def export_trace(collector, path: Optional[str] = None, full: bool = False) -> d
             opened = wait_open.pop(worker, None)
             if opened is not None:
                 reason, ender = extra
-                pid, tid = (
-                    (PID_RUNTIME, 0) if worker == "main" else (PID_WORKERS, worker)
-                )
-                if worker != "main":
+                if isinstance(worker, int):
+                    pid, tid = PID_WORKERS, worker
                     worker_tids.add(worker)
+                else:  # "main", "client-<tid>", ... — runtime-side waits
+                    pid, tid = PID_RUNTIME, runtime_tid(worker)
                 te.append({"ph": "X", "cat": "wait", "name": f"wait:{reason}",
                            "pid": pid, "tid": tid,
                            "ts": _us(opened[0]), "dur": max(0.0, t - _us(opened[0])),
@@ -136,12 +152,19 @@ def export_trace(collector, path: Optional[str] = None, full: bool = False) -> d
                 te.append({"ph": "e", "cat": "msg", "name": label_of(uid),
                            "id": uid, "pid": chan_pid(extra), "tid": 0, "ts": t})
         elif et == "drain-begin":
-            te.append({"ph": "B", "cat": "drain", "name": f"drain#{uid}",
-                       "pid": PID_RUNTIME, "tid": 0, "ts": t,
+            # async ("b"/"e", keyed by tag) rather than nested ("B"/"E"):
+            # concurrent cone drains interleave, and a stack-based E would
+            # close the wrong segment
+            open_drains.add(uid)
+            te.append({"ph": "b", "cat": "drain", "name": f"drain#{uid}",
+                       "id": str(uid), "pid": PID_RUNTIME, "tid": 0, "ts": t,
                        "args": {"n_pending": extra[0], "nworkers": extra[1]}})
         elif et == "drain-end":
-            te.append({"ph": "E", "cat": "drain", "name": f"drain#{uid}",
-                       "pid": PID_RUNTIME, "tid": 0, "ts": t})
+            if uid in open_drains:  # an end whose begin fell off the ring
+                open_drains.discard(uid)  # buffer has no segment to close
+                te.append({"ph": "e", "cat": "drain", "name": f"drain#{uid}",
+                           "id": str(uid), "pid": PID_RUNTIME, "tid": 0,
+                           "ts": t})
         elif et == "flush-begin":
             n_total, n_cone, sync, backend = extra
             te.append({"ph": "i", "s": "p", "cat": "flush",
@@ -180,14 +203,18 @@ def export_trace(collector, path: Optional[str] = None, full: bool = False) -> d
                        "name": f"{et}:{label_of(uid)}", "pid": pid, "tid": tid,
                        "ts": t, "args": {"uid": uid}})
 
-    # close still-in-flight messages at the end of the traced window so
-    # every async "b" has its "e" (the bar extends to the trace edge)
-    if posted and events:
+    # close still-in-flight messages and drains at the end of the traced
+    # window so every async "b" has its "e" (bars extend to the edge)
+    if events:
         t_end = _us(events[-1][0])
         for uid in sorted(posted, key=str):
             chan = next(iter(chan_pids)) if chan_pids else "channel"
             te.append({"ph": "e", "cat": "msg", "name": label_of(uid),
                        "id": uid, "pid": chan_pid(chan), "tid": 0,
+                       "ts": t_end, "args": {"in_flight_at_end": True}})
+        for tag in sorted(open_drains, key=str):
+            te.append({"ph": "e", "cat": "drain", "name": f"drain#{tag}",
+                       "id": str(tag), "pid": PID_RUNTIME, "tid": 0,
                        "ts": t_end, "args": {"in_flight_at_end": True}})
 
     # flow arrows: message delivery -> the compute slice it unblocked
@@ -207,6 +234,11 @@ def export_trace(collector, path: Optional[str] = None, full: bool = False) -> d
     for tid in sorted(worker_tids, key=str):
         te.append({"ph": "M", "pid": PID_WORKERS, "tid": tid,
                    "name": "thread_name", "args": {"name": f"worker-{tid}"}})
+    for label, tid in runtime_tids.items():
+        if tid == 0:
+            continue  # tid 0 is the runtime (main) row itself
+        te.append({"ph": "M", "pid": PID_RUNTIME, "tid": tid,
+                   "name": "thread_name", "args": {"name": label}})
 
     doc = {
         "traceEvents": te,

@@ -381,6 +381,52 @@ def test_flush_after_close_raises():
         rt.flush()
 
 
+def test_close_joins_outstanding_concurrent_drains():
+    """close() with several cones still in flight must join them all
+    and release the pool — the serving shutdown path."""
+    from repro.core import engine as _engine
+
+    rt = repro.runtime(nprocs=2, block_size=8, flush="async", latency=2e-3)
+    # bind TLS directly (not the context manager: __exit__ itself closes)
+    prev = getattr(_engine._tls, "runtime", None)
+    _engine._tls.runtime = rt
+    try:
+        arrs = [repro.ones((8,)) + float(i) for i in range(3)]
+        tickets = [rt.flush(wait=False, targets=[a]) for a in arrs]
+    finally:
+        _engine._tls.runtime = prev
+    rt.close()  # none of the tickets were waited on
+    assert all(t.done() for t in tickets)
+    assert rt._exec_executor_obj is None
+    rt.close()  # double close stays a no-op
+
+
+def test_close_surfaces_unobserved_drain_failure():
+    """An in-flight drain that fails before anyone waits on its ticket
+    must surface its exception from close() — after the resources are
+    released — instead of vanishing."""
+    from repro.core import engine as _engine
+    from repro.core.ufunc import UFunc
+
+    def _raise(x):
+        raise ValueError("boom-close")
+
+    boom = UFunc(name="boom_close_test", fn=_raise, nin=1)
+    rt = repro.runtime(nprocs=2, block_size=8, flush="async", latency=2e-3)
+    prev = getattr(_engine._tls, "runtime", None)
+    _engine._tls.runtime = rt
+    try:
+        a = repro.ones((8,))
+        rt.record_map(boom, (a._base, a._view), [(a._base, a._view)])
+        rt.flush(wait=False, targets=[a])
+    finally:
+        _engine._tls.runtime = prev
+    with pytest.raises(ValueError, match="boom-close"):
+        rt.close()
+    assert rt._exec_executor_obj is None  # released despite the error
+    rt.close()  # and still a no-op afterwards
+
+
 def test_executor_reusable_after_failed_drain():
     """A drain that errors must not wedge the persistent executor: the
     in-flight accounting resets, so a later submit still completes."""
@@ -397,7 +443,7 @@ def test_executor_reusable_after_failed_drain():
     try:
         with pytest.raises(TypeError, match="unknown payload"):
             ex.submit(deps).result(timeout=10.0)
-        assert ex._inflight == 0
+        assert ex.n_active_drains == 0
     finally:
         ex.close()
 

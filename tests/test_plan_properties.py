@@ -109,6 +109,79 @@ def test_passes_bit_identical_to_unplanned_simulator(prog):
             np.testing.assert_array_equal(ref, out, err_msg=f"{pipeline}")
 
 
+# per-tenant chain step for the concurrent-cone property: elementwise
+# ops plus rolls (the roll forces cross-block halo transfers, so the
+# overlapping drains really do share the channel and the worker pool)
+_tenant_op = st.one_of(
+    st.tuples(st.just("mul"), st.floats(-2, 2, allow_nan=False)),
+    st.tuples(st.just("add"), st.floats(-2, 2, allow_nan=False)),
+    st.tuples(st.just("roll"), st.integers(-3, 3), st.integers(0, 1)),
+)
+tenant_programs = st.lists(
+    st.lists(_tenant_op, min_size=1, max_size=5), min_size=2, max_size=4
+)
+
+
+def _apply_chain(x, prog):
+    """Run one tenant's op chain on ``x`` — a NumPy ndarray or a
+    DistArray (np.roll dispatches through __array_function__)."""
+    for step in prog:
+        if step[0] == "mul":
+            x = x * step[1]
+        elif step[0] == "add":
+            x = x + step[1]
+        else:
+            x = np.roll(x, step[1], axis=step[2])
+    return x
+
+
+@settings(max_examples=8, deadline=None)
+@given(progs=tenant_programs, seed=st.integers(0, 2**16))
+def test_concurrent_disjoint_cones_bit_identical_to_barrier(progs, seed):
+    """Serving-runtime property: each tenant's chain hangs off its own
+    base array, so the cones are pairwise disjoint; submitting every
+    cone via ``flush(wait=False)`` in a random order — all in flight
+    before any is awaited — must be bit-identical to one barrier flush
+    of the same graph and to the NumPy closed form, for both the empty
+    and the full pass pipeline."""
+    from repro.core import darray as dnp
+
+    hosts = [
+        np.arange(48.0).reshape(SHAPE) * (i + 1) - 20.0
+        for i in range(len(progs))
+    ]
+    expected = [_apply_chain(h, p) for h, p in zip(hosts, progs)]
+    for passes in ((), ("coalesce", "fuse", "batch")):
+        # concurrent leg: every cone submitted before any wait
+        with repro.runtime(nprocs=4, block_size=3, passes=passes,
+                           flush="async", sync="demand",
+                           latency=1e-3) as rt:
+            outs = [_apply_chain(dnp.array(h), p)
+                    for h, p in zip(hosts, progs)]
+            order = list(range(len(outs)))
+            random.Random(seed).shuffle(order)
+            tickets = [(i, rt.flush(wait=False, targets=[outs[i]]))
+                       for i in order]
+            for _, t in tickets:
+                t.wait()
+            got = [np.asarray(o).copy() for o in outs]
+        # barrier leg: the same graph, one whole-graph drain
+        with repro.runtime(nprocs=4, block_size=3, passes=passes,
+                           flush="async", sync="demand",
+                           latency=1e-3) as rt:
+            outs = [_apply_chain(dnp.array(h), p)
+                    for h, p in zip(hosts, progs)]
+            rt.flush()
+            got_barrier = [np.asarray(o).copy() for o in outs]
+        for ref, c, b in zip(expected, got, got_barrier):
+            np.testing.assert_array_equal(
+                c, ref, err_msg=f"concurrent diverged, passes={passes}"
+            )
+            np.testing.assert_array_equal(
+                b, ref, err_msg=f"barrier diverged, passes={passes}"
+            )
+
+
 @settings(max_examples=15, deadline=None)
 @given(prog=programs, seed=st.integers(0, 2**16))
 def test_demand_cone_forcing_order_bit_identical(prog, seed):
