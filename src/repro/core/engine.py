@@ -26,6 +26,7 @@ from __future__ import annotations
 import itertools
 import os
 import threading
+import time as _time
 import weakref
 from dataclasses import dataclass, field
 from typing import Optional, Sequence, Union
@@ -277,9 +278,10 @@ class FlushTicket:
     subsequent ``wait()``."""
 
     __slots__ = ("_rt", "_fut", "_stats", "_resolved", "_tag", "_keys",
-                 "_exc", "_lock")
+                 "_regions", "_exc", "_lock")
 
-    def __init__(self, rt: "Runtime", fut=None, stats=None, tag=None, keys=None):
+    def __init__(self, rt: "Runtime", fut=None, stats=None, tag=None, keys=None,
+                 regions=None):
         self._rt = rt
         self._fut = fut  # repro.exec Future -> WaitStats, or None
         self._stats = stats  # pre-completed result (sim flush / empty cone)
@@ -288,6 +290,9 @@ class FlushTicket:
         # cone access footprint (reads, writes) from cone_access_keys;
         # None = whole-graph flush (conflicts with everything)
         self._keys = keys
+        # region-precise footprint (cone_region_footprint), populated
+        # only under verify="full" — the race oracle's input
+        self._regions = regions
         self._exc: Optional[BaseException] = None
         self._lock = threading.Lock()
 
@@ -385,6 +390,7 @@ class Runtime:
         passes: Union[str, Sequence[str]] = "auto",
         sync: str = "auto",
         trace: Union[bool, str] = False,
+        verify: str = "off",
     ):
         self.nprocs = nprocs
         self.block_size = block_size
@@ -498,6 +504,22 @@ class Runtime:
         self._trace_owned = False
         self._trace_prev = None
         self.tracer = None
+        # -- static verification (repro.analysis): a policy/kwarg request,
+        # or REPRO_VERIFY=plan|full from the environment (mirrors
+        # REPRO_TRACE: the env only applies when the kwarg stayed "off").
+        if verify == "off":
+            env = os.environ.get("REPRO_VERIFY", "")
+            if env not in ("", "0", "off", "false", "False"):
+                verify = env
+        if verify not in ("off", "plan", "full"):
+            raise ValueError(f"unknown verify {verify!r} (off|plan|full)")
+        self.verify_mode = verify
+        self.verify_stats = None
+        self.last_verify_report = None
+        if verify != "off":
+            from repro.analysis import VerifyStats
+
+            self.verify_stats = VerifyStats()
 
     @classmethod
     def from_config(cls, config=None, policy=None) -> "Runtime":
@@ -531,6 +553,7 @@ class Runtime:
             # authority on what "auto" means for the config path
             sync=policy.resolved_sync,
             trace=policy.trace,
+            verify=getattr(policy, "verify", "off"),
         )
 
     # -- context management -------------------------------------------------
@@ -994,6 +1017,7 @@ class Runtime:
         dead = set(self._dead_bases)
         n_total = deps.n_pending
         keys = None
+        regions = None
         if targets is not None:
             cone_ops, rest_ops = producer_cone(
                 deps.pending_ops(), self._resolve_targets(targets)
@@ -1013,6 +1037,20 @@ class Runtime:
                 self._join_conflicting((read_keys, set()), base_ids=ids)
                 self._barrier_cleanup()
                 return None if wait else FlushTicket(self)
+            if self.verify_mode == "full":
+                # region-level race oracle: before deciding (by key-level
+                # cones_conflict) which in-flight drains to join, prove
+                # the key-granular answer sound at Region granularity.
+                # Runs before _join_conflicting so a failure leaves every
+                # in-flight drain untouched.
+                from .graph import cone_region_footprint
+
+                _t0 = _time.perf_counter()
+                regions = cone_region_footprint(cone_ops)
+                self._verify_races(keys, regions)
+                self.verify_stats.verify_seconds += (
+                    _time.perf_counter() - _t0
+                )
             self._join_conflicting(keys)
             # a GC'd base only licenses dead-store elimination when no
             # *remainder* operation still touches it: the cone may hold a
@@ -1039,6 +1077,19 @@ class Runtime:
         if self.passes:
             from .plan import plan as run_plan
 
+            pre_views = None
+            if self.verify_mode != "off":
+                # snapshot footprints BEFORE planning: passes rewrite
+                # payloads/accesses in place (fill→map const folding), so
+                # the pre-plan op objects are not a record of the pre-plan
+                # program — immutable OpViews are
+                from repro.analysis import snapshot_ops
+
+                _t0 = _time.perf_counter()
+                pre_views = snapshot_ops(deps.pending_ops())
+                self.verify_stats.verify_seconds += (
+                    _time.perf_counter() - _t0
+                )
             planned = run_plan(
                 deps,
                 self.passes,
@@ -1048,10 +1099,13 @@ class Runtime:
             deps = planned.deps
             hints = planned.hints
             self.plan_stats.merge(planned.stats)
+            if pre_views is not None:
+                self._verify_plan(pre_views, planned, dead)
         self.flush_count += 1
         self._recorded_since_flush = self.deps.n_pending
         if self.flush_backend == "async":
-            ticket = self._flush_async(deps, hints, fid, keys=keys)
+            ticket = self._flush_async(deps, hints, fid, keys=keys,
+                                       regions=regions)
             if wait:
                 res = ticket.wait()
                 self._barrier_cleanup()
@@ -1105,14 +1159,15 @@ class Runtime:
                     ids.add((base.id, frag.block))
         return ids
 
-    def _flush_async(self, deps, hints, tag=None, keys=None) -> FlushTicket:
+    def _flush_async(self, deps, hints, tag=None, keys=None,
+                     regions=None) -> FlushTicket:
         """Submit ``deps`` to the persistent multi-worker executor
         (repro.exec) and return the in-flight ticket without joining."""
         executor = self._ensure_executor()
         fut = executor.submit(
             deps, batch_dispatch=bool(hints.get("batch_dispatch")), tag=tag
         )
-        return FlushTicket(self, fut=fut, tag=tag, keys=keys)
+        return FlushTicket(self, fut=fut, tag=tag, keys=keys, regions=regions)
 
     def _ensure_executor(self):
         from repro.exec import AsyncExecutor, make_backend, make_channel
@@ -1203,6 +1258,84 @@ class Runtime:
             if t is None:
                 return
             t.wait()  # propagates the conflicting drain's failure
+
+    # -- static verification (repro.analysis) -------------------------------
+    def _verify_plan(self, pre_views, planned, dead) -> None:
+        """verify="plan"/"full": prove the planned op list preserves the
+        recorded happens-before order before it reaches the executor.
+        Raises :class:`repro.analysis.VerificationError` on any
+        error-severity finding — the flush aborts with nothing executed
+        (the cone was already extracted from the recorded graph, so the
+        runtime is not usable for further flushes after the raise;
+        verification failures are fatal by design)."""
+        from repro.analysis import check
+
+        _t0 = _time.perf_counter()
+        report = check(
+            pre=pre_views,
+            post=planned.deps.pending_ops(),
+            dead_bases=dead,
+            provenance=planned.provenance,
+            dropped=planned.dropped,
+            scratch_available=set(self.scratch),
+            rules=("plan", "deadlock"),
+        )
+        stats = self.verify_stats
+        stats.verify_seconds += _time.perf_counter() - _t0
+        stats.n_flushes_verified += 1
+        stats.n_diagnostics += len(report.diagnostics)
+        self.last_verify_report = report
+        report.raise_if_errors()
+
+    def _verify_races(self, keys, regions) -> None:
+        """verify="full": the region-level soundness oracle for the
+        key-granular ``cones_conflict`` concurrency test.  A region-level
+        conflict that key-level conflict detection misses means two
+        drains the runtime would have run concurrently actually race —
+        an error.  The reverse (key conflict, no region conflict) is the
+        expected over-approximation; it is only *counted* (the precision
+        statistic feeding the sub-block cone-precision roadmap item)."""
+        from repro.analysis.diagnostics import (
+            ERROR,
+            AnalysisReport,
+            Diagnostic,
+        )
+        from .graph import cones_conflict, region_footprints_conflict
+
+        stats = self.verify_stats
+        with self._ticket_lock:
+            inflight = [
+                t for t in self._tickets
+                if not t.done() and t._keys is not None
+                and t._regions is not None
+            ]
+        report = AnalysisReport(rules_run=("races",))
+        for t in inflight:
+            stats.n_race_checks += 1
+            kc = cones_conflict(t._keys, keys)
+            rk = region_footprints_conflict(t._regions, regions)
+            if rk is not None and not kc:
+                report.diagnostics.append(Diagnostic(
+                    rule="races",
+                    severity=ERROR,
+                    message=(
+                        f"region-level conflict with in-flight drain "
+                        f"#{t._tag} that key-level cones_conflict missed "
+                        f"— the concurrent-drain oracle is unsound"
+                    ),
+                    ops=(t._tag,),
+                    key=rk,
+                ))
+            elif kc:
+                stats.n_key_conflicts += 1
+                report.n_key_conflicts += 1
+                if rk is None:
+                    stats.n_region_false_positives += 1
+                    report.n_region_false_positives += 1
+        if report.diagnostics:
+            stats.n_diagnostics += len(report.diagnostics)
+            self.last_verify_report = report
+            report.raise_if_errors()
 
     def _ticket_done(self, ticket: FlushTicket, res) -> None:
         with self._ticket_lock:

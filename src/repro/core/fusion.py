@@ -40,7 +40,6 @@ from __future__ import annotations
 from collections import defaultdict
 
 from repro.api.registry import register_pass
-from repro.obs import collector as _obs
 
 from .darray import Expr  # noqa: F401  (re-export: the record-time layer)
 from .engine import (
@@ -176,9 +175,7 @@ def _fuse_map_reduce(ctx: PlanContext) -> None:
             if not a.write:
                 node.add_access(AccessNode(a.key, a.region, write=False))
         node.add_access(AccessNode(("s", p.dst_scratch), None, write=True))
-        col = _obs.CURRENT
-        if col is not None:
-            col.op_rewritten("fuse", node, [mop.uid, op.uid])
+        ctx.note_rewrite(node, (mop, op))
         fused[mpos] = node
         dropped.add(i)
     if fused:
@@ -213,6 +210,8 @@ def _drop_dead_stores(ctx: PlanContext) -> None:
             continue
         drop.add(i)
     if drop:
+        for i in drop:
+            ctx.note_drop(ops[i])
         ctx.ops = [op for i, op in enumerate(ops) if i not in drop]
         ctx.dirty = True
         ctx.stats.n_dropped += len(drop)

@@ -34,6 +34,8 @@ __all__ = [
     "producer_cone",
     "cone_access_keys",
     "cones_conflict",
+    "cone_region_footprint",
+    "region_footprints_conflict",
 ]
 
 _op_counter = itertools.count()
@@ -190,6 +192,55 @@ def cones_conflict(a: tuple[set, set], b: tuple[set, set]) -> bool:
     ar, aw = a
     br, bw = b
     return bool(aw & (br | bw)) or bool(bw & ar)
+
+
+def cone_region_footprint(ops: list[OperationNode]) -> dict:
+    """The *region-precise* access footprint of a cone: ``key -> ([read
+    regions], [write regions])``.  Unlike :func:`cone_access_keys` this
+    keeps the per-dimension index regions, so two cones sharing a block
+    key but touching disjoint slices can be told apart — the precision
+    the key-granular conflict check gives up.  A whole-block access
+    (region ``None``) collapses its list to ``[None]``."""
+    fp: dict = {}
+    for op in ops:
+        for acc in op.accesses:
+            entry = fp.get(acc.key)
+            if entry is None:
+                entry = fp[acc.key] = ([], [])
+            lst = entry[1] if acc.write else entry[0]
+            if lst and lst[0] is None:
+                continue  # already whole-block
+            if acc.region is None:
+                lst[:] = [None]
+            else:
+                lst.append(acc.region)
+    return fp
+
+
+def _any_overlap(regions_a: list, regions_b: list) -> bool:
+    for ra in regions_a:
+        for rb in regions_b:
+            if regions_overlap(ra, rb):
+                return True
+    return False
+
+
+def region_footprints_conflict(a: dict, b: dict):
+    """§5.7 conflict between two :func:`cone_region_footprint` maps:
+    returns the first key where one side's writes overlap the other
+    side's reads or writes at region granularity, or ``None`` when the
+    footprints may drain concurrently."""
+    keys = a.keys() & b.keys() if len(a) < len(b) else b.keys() & a.keys()
+    for key in keys:
+        ar, aw = a[key]
+        br, bw = b[key]
+        if (
+            _any_overlap(aw, br)
+            or _any_overlap(aw, bw)
+            or _any_overlap(bw, ar)
+        ):
+            return key
+    return None
 
 
 def _reset_for_reinsert(op: OperationNode) -> None:

@@ -127,10 +127,39 @@ class PlanContext:
     stats: PlanStats = field(default_factory=PlanStats)
     max_coalesce: int = MAX_COALESCE
     dirty: bool = False
+    # rewrite provenance, fed to obs tracing and the static plan
+    # verifier (repro.analysis): new uid -> (pass, source uids), and
+    # dropped uid -> pass
+    provenance: dict = field(default_factory=dict)
+    dropped: dict = field(default_factory=dict)
+    _active_pass: Optional[str] = None
 
     def dtype_of(self, base_id: int, block: tuple):
         blk = self.storage.get((base_id, block))
         return None if blk is None else blk.dtype
+
+    def note_rewrite(self, op: OperationNode, sources) -> None:
+        """Record that the active pass built ``op`` out of ``sources``
+        (operation-nodes or uids).  Every pass that replaces nodes MUST
+        call this: it is both the obs ``rewritten`` trace event and the
+        provenance the plan verifier uses to follow a constituent to
+        its merged node (and to blame the right pass in diagnostics)."""
+        name = self._active_pass or "<pass>"
+        srcs = tuple(getattr(s, "uid", s) for s in sources)
+        self.provenance[op.uid] = (name, srcs)
+        col = _obs.CURRENT
+        if col is not None:
+            col.op_rewritten(name, op, srcs)
+
+    def note_drop(self, op: OperationNode) -> None:
+        """Record that the active pass eliminated ``op`` outright
+        (dead-store elimination).  Emits the obs ``dropped`` event and
+        feeds the verifier's drop provenance."""
+        name = self._active_pass or "<pass>"
+        self.dropped[op.uid] = name
+        col = _obs.CURRENT
+        if col is not None:
+            col.op_dropped(name, op)
 
 
 @dataclass
@@ -138,6 +167,10 @@ class PlanResult:
     deps: DependencySystem
     hints: dict
     stats: PlanStats
+    # rewrite/drop provenance accumulated by the pipeline (see
+    # PlanContext.note_rewrite / note_drop) — the plan verifier's input
+    provenance: dict = field(default_factory=dict)
+    dropped: dict = field(default_factory=dict)
 
 
 def resolve_pipeline(
@@ -196,12 +229,16 @@ def plan(
     col = _obs.CURRENT
     for name in pipeline:
         n_before = len(ctx.ops)
-        get_pass(name)(ctx)
+        ctx._active_pass = name
+        try:
+            get_pass(name)(ctx)
+        finally:
+            ctx._active_pass = None
         if col is not None:
             col.plan_pass(name, n_before, len(ctx.ops))
     stats.n_ops_out = len(ctx.ops)
     new_deps = type(deps).rebuild(ctx.ops) if ctx.dirty else deps
-    return PlanResult(new_deps, ctx.hints, stats)
+    return PlanResult(new_deps, ctx.hints, stats, ctx.provenance, ctx.dropped)
 
 
 # ---------------------------------------------------------------------------
@@ -272,9 +309,7 @@ def coalesce_transfers(ctx: PlanContext) -> None:
         for m in members:
             for acc in m.accesses:
                 merged.add_access(AccessNode(acc.key, acc.region, acc.write))
-        col = _obs.CURRENT
-        if col is not None:
-            col.op_rewritten("coalesce", merged, [m.uid for m in members])
+        ctx.note_rewrite(merged, members)
         new_ops.append(merged)
         merged_away += len(members) - 1
     ctx.ops = new_ops

@@ -975,19 +975,35 @@ class AsyncExecutor:
 # ---------------------------------------------------------------------------
 
 
-def run_rendezvous_bsp_async(per_proc_programs: list[list[dict]]) -> int:
+def run_rendezvous_bsp_async(
+    per_proc_programs: list[list[dict]], static_check: bool = True
+) -> int:
     """Execute the paper's naive evaluation (fig. 6) with real threads:
     each rank walks its own operation list in order; sends and receives
     rendezvous through a :class:`RendezvousMailbox`.
 
     Well-ordered schedules complete and return the number of completed
-    steps.  Schedules like fig. 6's deadlock — detected structurally (all
-    live ranks parked on unmatched messages) and refused with a
-    :class:`DeadlockError` listing the stuck operation-nodes.  This is the
-    contrast the flush executor exists for: the *same* data movement
+    steps.  Schedules like fig. 6's deadlock — rejected *statically at
+    plan time* by the ``repro.analysis`` deadlock rule (a cycle in the
+    cross-rank message-match graph, or an unmatched message) before any
+    thread starts, and — for completeness with ``static_check=False`` —
+    also detected structurally at runtime (all live ranks parked on
+    unmatched messages).  Both paths refuse with a
+    :class:`DeadlockError` listing the stuck operation-nodes.  This is
+    the contrast the flush executor exists for: the *same* data movement
     expressed as one-sided transfers in a dependency graph cannot
     deadlock (§5.7.1).
     """
+    if static_check:
+        from repro.analysis import check
+
+        report = check(schedule=per_proc_programs, rules=("deadlock",))
+        if not report.ok:
+            raise DeadlockError(
+                "rendezvous-BSP schedule rejected statically at plan time "
+                "(repro.analysis deadlock rule):\n"
+                + "\n".join(d.message for d in report.errors)
+            )
     n = len(per_proc_programs)
     mailbox = RendezvousMailbox(n)
     steps = [0] * n

@@ -29,6 +29,8 @@ etype                   meaning / extra payload
 ``recorded``            op inserted into the dependency system
 ``rewritten``           plan pass built/replaced a node; extra =
                         ``(pass_name, (src_uid, ...))``
+``dropped``             plan pass eliminated a node outright (dead-store
+                        elimination); extra = pass name
 ``plan-pass``           one pass ran; extra = ``(name, n_ops_in, n_ops_out)``
 ``flush-begin``         Runtime.flush started; uid = flush id, extra =
                         ``(n_pending_total, n_cone, sync_mode, backend)``
@@ -122,6 +124,18 @@ class TraceCollector:
                 None,
                 (pass_name, tuple(src_uids)),
             )
+        )
+
+    def op_dropped(self, pass_name: str, op) -> None:
+        """A plan pass eliminated ``op`` outright (dead-store
+        elimination); extra = the pass name.  Together with
+        ``rewritten`` this is the complete rewrite provenance the
+        static plan verifier (repro.analysis) consumes."""
+        if op.uid not in self.ops:
+            self.ops[op.uid] = (op.kind, op.label, op.nbytes)
+        self.n_emitted += 1
+        self.events.append(
+            (time.perf_counter() - self.t0, "dropped", op.uid, None, pass_name)
         )
 
     def plan_pass(self, name: str, n_in: int, n_out: int) -> None:

@@ -183,6 +183,12 @@ def export_trace(collector, path: Optional[str] = None, full: bool = False) -> d
                        "tid": 0, "ts": t,
                        "args": {"uid": uid, "label": label_of(uid),
                                 "sources": list(srcs)}})
+        elif et == "dropped":
+            te.append({"ph": "i", "s": "t", "cat": "plan",
+                       "name": f"drop:{extra}", "pid": PID_RUNTIME,
+                       "tid": 0, "ts": t,
+                       "args": {"uid": uid, "label": label_of(uid),
+                                "pass": extra}})
         elif et == "counter":
             te.append({"ph": "C", "cat": "gauge", "name": uid,
                        "pid": PID_COUNTERS, "tid": 0, "ts": t,
@@ -271,6 +277,9 @@ def validate_trace(trace: Union[str, dict]) -> dict:
     per_phase: dict = {}
     pids: set = set()
     async_balance: dict = {}
+    async_open: dict = {}  # (cat, id) -> open depth (b before e, no double-open)
+    flow_starts: dict = {}  # (cat, id) -> ts of the "s" endpoint
+    flow_finishes: dict = {}  # (cat, id) -> ts of the "f" endpoint
     for i, ev in enumerate(evs):
         if not isinstance(ev, dict):
             raise ValueError(f"event #{i} is not an object")
@@ -300,10 +309,48 @@ def validate_trace(trace: Union[str, dict]) -> dict:
             if key[1] is None:
                 raise ValueError(f"event #{i}: async {ph} without an id")
             async_balance[key] = async_balance.get(key, 0) + (1 if ph == "b" else -1)
+            # nesting: segments (drain/msg) must open before they close
+            # and must not double-open the same (cat, id)
+            depth = async_open.get(key, 0)
+            if ph == "b":
+                if depth > 0:
+                    raise ValueError(
+                        f"event #{i}: async b for {key} opened twice "
+                        f"without an intervening e"
+                    )
+                async_open[key] = depth + 1
+            else:
+                if depth <= 0:
+                    raise ValueError(
+                        f"event #{i}: async e for {key} closes a segment "
+                        f"that was never opened"
+                    )
+                async_open[key] = depth - 1
+        if ph in ("s", "f"):
+            key = (ev.get("cat"), ev.get("id"))
+            if key[1] is None:
+                raise ValueError(f"event #{i}: flow {ph} without an id")
+            side = flow_starts if ph == "s" else flow_finishes
+            side[key] = ev.get("ts")
     unbalanced = {k: v for k, v in async_balance.items() if v != 0}
     if unbalanced:
         raise ValueError(
             f"{len(unbalanced)} async event id(s) with unbalanced b/e pairs "
             f"(first: {next(iter(unbalanced))})"
         )
+    # flow arrows: every id needs both endpoints, and the arrow must not
+    # point backwards in time (delivery happens before the unblocked slice)
+    for key in flow_starts.keys() | flow_finishes.keys():
+        s_ts = flow_starts.get(key)
+        f_ts = flow_finishes.get(key)
+        if s_ts is None or f_ts is None:
+            missing = "f" if f_ts is None else "s"
+            raise ValueError(
+                f"flow id {key} is missing its {missing!r} endpoint"
+            )
+        if s_ts > f_ts:
+            raise ValueError(
+                f"flow id {key} points backwards in time "
+                f"(s at {s_ts} > f at {f_ts})"
+            )
     return {"n_events": len(evs), "per_phase": per_phase, "pids": sorted(pids)}

@@ -1,0 +1,485 @@
+"""Mutation suite for the static analyzer (repro.analysis).
+
+Each analysis must catch its seeded mutant:
+
+* the happens-before plan verifier flags a dependence-inverting
+  rewrite, dead-store elimination of a live store (including the PR-4
+  bug class: an unrestricted dead set dropping a store whose consumer
+  is in the flush remainder), and a merged node whose placement hoists
+  a read above a conflicting write;
+* the region-level race detector (the soundness oracle for the
+  key-granular ``cones_conflict``) flags a broken conflict test that
+  would let racing drains run concurrently — and counts key-level
+  conflicts that are region-level false positives as the precision
+  report;
+* the static deadlock detector rejects the paper's fig. 6 rendezvous
+  cycle (and unmatched messages) at plan time, and flags planned ops
+  reading scratch no producer delivers.
+
+And the built-in pipelines must verify clean: every diagnostic on a
+real program is a bug in a pass, not noise.
+"""
+import numpy as np
+import pytest
+
+import repro
+from repro.analysis import (
+    AnalysisReport,
+    Diagnostic,
+    VerificationError,
+    available_rules,
+    check,
+    register_rule,
+)
+from repro.api.config import ExecutionPolicy
+from repro.api.registry import PASSES, RULES, register_pass
+from repro.core.engine import FlushTicket
+from repro.core.graph import (
+    COMPUTE,
+    AccessNode,
+    OperationNode,
+    cone_region_footprint,
+    region_footprints_conflict,
+)
+
+FULL = ExecutionPolicy(flush="async", channel="async", sync="demand",
+                       verify="full")
+
+
+@pytest.fixture
+def evil_pass():
+    """Register a throwaway mutant pass; unregister on teardown."""
+    names = []
+
+    def add(name, fn):
+        register_pass(name, fn)
+        names.append(name)
+        return name
+
+    yield add
+    for name in names:
+        PASSES.unregister(name)
+
+
+def _mk(key, region, write, label):
+    op = OperationNode(COMPUTE, None, procs=(0,), label=label)
+    op.add_access(AccessNode(key, region, write=write))
+    return op
+
+
+# ---------------------------------------------------------------------------
+# configuration surface
+# ---------------------------------------------------------------------------
+
+
+def test_policy_verify_validation():
+    with pytest.raises(ValueError, match="off|plan|full"):
+        ExecutionPolicy(verify="bogus")
+    for mode in ("off", "plan", "full"):
+        assert ExecutionPolicy(verify=mode).verify == mode
+
+
+def test_runtime_verify_kwarg_and_env(monkeypatch):
+    from repro.core.engine import Runtime
+
+    rt = Runtime(nprocs=2, verify="plan")
+    assert rt.verify_mode == "plan" and rt.verify_stats is not None
+    rt = Runtime(nprocs=2)
+    assert rt.verify_mode == "off" and rt.verify_stats is None
+
+    monkeypatch.setenv("REPRO_VERIFY", "full")
+    rt = Runtime(nprocs=2)
+    assert rt.verify_mode == "full"
+    # explicit kwarg beats the environment
+    rt = Runtime(nprocs=2, verify="plan")
+    assert rt.verify_mode == "plan"
+    monkeypatch.setenv("REPRO_VERIFY", "bogus")
+    with pytest.raises(ValueError, match="verify"):
+        Runtime(nprocs=2)
+
+
+def test_register_rule_registry():
+    assert {"plan", "races", "deadlock"} <= set(available_rules())
+    seen = []
+
+    @register_rule("test-custom")
+    def custom(ctx):
+        seen.append(True)
+        ctx.emit("test-custom", "info", "ran")
+
+    try:
+        rep = check(rules=("test-custom",))
+        assert seen and len(rep.diagnostics) == 1
+        assert rep.rules_run == ("test-custom",)
+    finally:
+        RULES.unregister("test-custom")
+
+
+# ---------------------------------------------------------------------------
+# clean programs: built-in pipelines verify clean under verify="full"
+# ---------------------------------------------------------------------------
+
+
+def test_builtin_pipeline_verifies_clean():
+    with repro.runtime(nprocs=4, block_size=16, policy=FULL) as rt:
+        a = repro.array(np.arange(64.0))
+        b = a * 2.0 + 1.0
+        t = b * b
+        s = t.sum()  # dead temp -> map+reduce fusion
+        del t
+        a[0:8] = 7.0
+        np.testing.assert_allclose(np.asarray(b), np.arange(64.0) * 2 + 1)
+        np.testing.assert_allclose(
+            np.asarray(s), ((np.arange(64.0) * 2 + 1) ** 2).sum()
+        )
+        vs = rt.verify_stats
+        assert vs.n_flushes_verified >= 1
+        assert vs.n_diagnostics == 0
+        assert rt.last_verify_report is not None
+        assert rt.last_verify_report.ok
+
+
+def test_check_identity_plan_is_clean():
+    ops = [
+        _mk((1, (0,)), ((0, 8),), True, "w"),
+        _mk((1, (0,)), ((0, 8),), False, "r"),
+    ]
+    rep = check(pre=ops, post=ops, rules=("plan", "deadlock"))
+    assert rep.ok and not rep.diagnostics
+
+
+# ---------------------------------------------------------------------------
+# plan-rule mutants
+# ---------------------------------------------------------------------------
+
+
+def test_inversion_mutant_caught(evil_pass):
+    def reverse(ctx):
+        ctx.ops = list(reversed(ctx.ops))
+        ctx.dirty = True
+
+    name = evil_pass("evil-reverse", reverse)
+    with pytest.raises(VerificationError) as ei:
+        with repro.runtime(nprocs=2, block_size=16,
+                           policy=FULL.replace(passes=(name,))):
+            a = repro.ones((32,))
+            a += 1.0
+            a *= 3.0  # conflicting write pair -> inverted by the mutant
+            np.asarray(a)
+    report = ei.value.report
+    assert any(d.rule == "plan" and "inverted" in d.message
+               for d in report.errors)
+
+
+def test_dropped_live_store_mutant_caught(evil_pass):
+    def drop_first_store(ctx):
+        for i, op in enumerate(ctx.ops):
+            if any(a.write and a.key[0] != "s" for a in op.accesses):
+                ctx.note_drop(op)
+                ctx.ops = ctx.ops[:i] + ctx.ops[i + 1:]
+                ctx.dirty = True
+                return
+
+    name = evil_pass("evil-drop", drop_first_store)
+    with pytest.raises(VerificationError) as ei:
+        with repro.runtime(nprocs=2, block_size=16,
+                           policy=FULL.replace(passes=(name,))):
+            a = repro.ones((32,))
+            a += 1.0
+            np.asarray(a)
+    report = ei.value.report
+    err = next(d for d in report.errors if d.rule == "plan")
+    assert "live base" in err.message
+    assert err.pass_name == "evil-drop"  # provenance blames the mutant
+
+
+def test_pr4_unrestricted_dse_mutant_caught(evil_pass):
+    """The PR-4 bug class: fuse's dead-store elimination must not treat
+    a base as dead when its consumer is in the flush *remainder* (the
+    engine restricts the dead set per cone).  A mutant doing DSE with
+    the unrestricted runtime-wide dead set drops the producer whose
+    consumer is still pending — the verifier must flag it; the real
+    pipeline on the same program must verify clean and stay correct."""
+    host = np.arange(32.0)
+
+    def scenario(rt_policy, rt_holder=None):
+        with repro.runtime(nprocs=2, block_size=16, policy=rt_policy) as rt:
+            if rt_holder is not None:
+                rt_holder.append(rt)
+            a = repro.array(host.copy())
+            np.asarray(a)  # drain creation: the cone below is P+W only
+            x = a * 2.0  # P: producer, reads a
+            y = x + 1.0  # C: consumer — stays in the remainder
+            a[0:16] = 7.0  # W: write to a pulls P in (anti-dependency)
+            del x  # x's base is GC-dead runtime-wide, but C still reads it
+            # sub-view readback forces the {P, W} cone; C is remainder
+            sub = np.asarray(a[0:16])
+            return sub, np.asarray(y)
+
+    # the real pipeline: correct and clean
+    holder = []
+    sub, y = scenario(FULL.replace(passes=("coalesce", "fuse", "batch")),
+                      holder)
+    np.testing.assert_allclose(sub, 7.0)
+    np.testing.assert_allclose(y, host * 2.0 + 1.0)
+    assert holder[0].verify_stats.n_diagnostics == 0
+
+    # the mutant: DSE keyed on the *unrestricted* dead set
+    holder2 = []
+
+    def unrestricted_dse(ctx):
+        rt = holder2[0]
+        drop = [
+            i for i, op in enumerate(ctx.ops)
+            if getattr(op.payload, "out_base", None) in rt._dead_bases
+        ]
+        if drop:
+            for i in drop:
+                ctx.note_drop(ctx.ops[i])
+            ctx.ops = [op for i, op in enumerate(ctx.ops)
+                       if i not in set(drop)]
+            ctx.dirty = True
+
+    name = evil_pass("evil-unrestricted-dse", unrestricted_dse)
+    with pytest.raises(VerificationError) as ei:
+        scenario(FULL.replace(passes=(name,)), holder2)
+    report = ei.value.report
+    err = next(d for d in report.errors if d.rule == "plan")
+    assert "live base" in err.message
+    assert err.pass_name == "evil-unrestricted-dse"
+
+
+def test_merge_hoisting_read_above_write_caught():
+    """A merged node is exempt from ordering *within itself*, but its
+    placement must still respect conflicts with third ops: merging two
+    reads across an intervening write hoists the later read."""
+    k = (7, (0,))
+    A = _mk(k, None, False, "readA")
+    B = _mk(k, None, True, "writeB")
+    C = _mk(k, None, False, "readC")
+    M = OperationNode(COMPUTE, None, procs=(0,), label="mergedAC")
+    M.add_access(AccessNode(k, None, write=False))
+    rep = check(
+        pre=[A, B, C],
+        post=[M, B],
+        provenance={M.uid: ("evil-merge", (A.uid, C.uid))},
+        rules=("plan",),
+    )
+    err = next(d for d in rep.errors if d.rule == "plan")
+    assert "inverted" in err.message
+    assert set(err.ops) == {B.uid, C.uid}
+    assert err.pass_name == "evil-merge"
+
+
+def test_legit_merge_shares_position_no_false_positive():
+    """Coalesce-style merges keep both members at one post position —
+    conflicting accesses *inside* the merged node must not be reported
+    (they execute atomically in the merged payload)."""
+    k = (7, (0,))
+    A = _mk(k, None, True, "w1")
+    B = _mk(k, None, True, "w2")
+    M = _mk(k, None, True, "merged")
+    rep = check(pre=[A, B], post=[M],
+                provenance={M.uid: ("coalesce", (A.uid, B.uid))},
+                rules=("plan",))
+    assert rep.ok
+
+
+# ---------------------------------------------------------------------------
+# race-rule mutants (the cones_conflict soundness oracle)
+# ---------------------------------------------------------------------------
+
+
+class _FakeFut:
+    """An in-flight drain future: never done, resolves to None when
+    joined (so _join_conflicting does not block)."""
+
+    def done(self):
+        return False
+
+    def result(self, timeout=None):
+        return None
+
+    def add_done_callback(self, fn):
+        pass
+
+
+def test_race_rule_flags_broken_cones_conflict(monkeypatch):
+    c1 = [_mk((1, (0,)), ((0, 16),), True, "w0")]
+    c2 = [_mk((1, (0,)), ((8, 24),), False, "r0")]
+    rep = check(cones=[("A", c1), ("B", c2)], rules=("races",))
+    assert rep.ok and rep.n_key_conflicts == 1  # sound oracle: no error
+
+    from repro.core import graph as G
+
+    monkeypatch.setattr(G, "cones_conflict", lambda a, b: False)
+    rep = check(cones=[("A", c1), ("B", c2)], rules=("races",))
+    err = next(d for d in rep.errors if d.rule == "races")
+    assert "race" in err.message and err.key == (1, (0,))
+
+
+def test_race_rule_precision_report():
+    c1 = [_mk((1, (0,)), ((0, 8),), True, "w")]
+    c2 = [_mk((1, (0,)), ((8, 16),), False, "r")]
+    rep = check(cones=[c1, c2], rules=("races",))
+    assert rep.ok
+    assert rep.n_key_conflicts == 1
+    assert rep.n_region_false_positives == 1  # disjoint regions, same key
+    assert any(d.severity == "info" for d in rep.diagnostics)
+
+
+def test_engine_race_oracle_catches_broken_cones_conflict(monkeypatch):
+    """verify="full" end to end: a fabricated in-flight drain whose
+    region footprint overlaps the new cone, plus a broken (always-
+    False) cones_conflict, must abort the flush — with the in-flight
+    state untouched (the check runs before any join/extraction)."""
+    from repro.core import graph as G
+
+    with repro.runtime(nprocs=2, block_size=8, policy=FULL) as rt:
+        a = repro.array(np.ones(16))
+        np.asarray(a)  # drain creation ops
+        a += 1.0
+        key = (a._base.id, (0,))
+        fake = FlushTicket(rt, fut=_FakeFut(), tag=999,
+                           keys=(set(), {key}),
+                           regions={key: ([], [None])})
+        rt._tickets.append(fake)
+        try:
+            monkeypatch.setattr(G, "cones_conflict", lambda x, y: False)
+            n_pending = rt.deps.n_pending
+            with pytest.raises(VerificationError) as ei:
+                np.asarray(a)
+            assert rt.deps.n_pending == n_pending  # nothing extracted
+            assert rt.verify_stats.n_race_checks >= 1
+            err = next(iter(ei.value.report.errors))
+            assert err.rule == "races" and err.key == key
+        finally:
+            rt._tickets.remove(fake)
+        np.testing.assert_allclose(np.asarray(a), 2.0)  # still usable
+
+
+def test_engine_precision_counters():
+    """A key-level conflict whose regions are disjoint serializes the
+    drains (sound) but counts as a region-level false positive — the
+    precision statistic the sub-block cone roadmap item feeds on."""
+    with repro.runtime(nprocs=2, block_size=8, policy=FULL) as rt:
+        a = repro.array(np.ones(16))
+        np.asarray(a)
+        a[0:4] += 1.0  # sub-region write in block 0
+        ops = rt.deps.pending_ops()
+        regions = [acc.region for op in ops for acc in op.accesses
+                   if acc.write and acc.key == (a._base.id, (0,))]
+        assert regions and all(r is not None for r in regions)
+        key = (a._base.id, (0,))
+        fake = FlushTicket(rt, fut=_FakeFut(), tag=998,
+                           keys=(set(), {key}),
+                           regions={key: ([], [((4, 8),)])})
+        rt._tickets.append(fake)
+        np.asarray(a)  # joins the fake (key conflict), counts the fp
+        vs = rt.verify_stats
+        assert vs.n_key_conflicts >= 1
+        assert vs.n_region_false_positives >= 1
+        assert vs.precision is not None and vs.precision < 1.0
+        assert vs.n_diagnostics == 0  # precision loss is not an error
+
+
+def test_region_footprint_geometry():
+    ops = [
+        _mk((1, (0,)), ((0, 8),), True, "w"),
+        _mk((1, (0,)), ((4, 12),), False, "r"),
+        _mk((2, (0,)), None, True, "whole"),
+    ]
+    fp = cone_region_footprint(ops)
+    assert fp[(1, (0,))] == ([((4, 12),)], [((0, 8),)])
+    assert fp[(2, (0,))] == ([], [None])
+    other = cone_region_footprint([_mk((1, (0,)), ((12, 16),), True, "w2")])
+    assert region_footprints_conflict(fp, other) is None  # disjoint regions
+    other2 = cone_region_footprint([_mk((1, (0,)), ((6, 16),), True, "w3")])
+    assert region_footprints_conflict(fp, other2) == (1, (0,))
+
+
+# ---------------------------------------------------------------------------
+# deadlock rule: static fig. 6 + dangling scratch
+# ---------------------------------------------------------------------------
+
+
+def test_fig6_cycle_rejected_statically():
+    p0 = [{"kind": "recv", "tag": "x", "peer": 1},
+          {"kind": "send", "tag": "y", "peer": 1}]
+    p1 = [{"kind": "recv", "tag": "y", "peer": 0},
+          {"kind": "send", "tag": "x", "peer": 0}]
+    rep = check(schedule=[p0, p1], rules=("deadlock",))
+    err = next(d for d in rep.errors if d.rule == "deadlock")
+    assert "cycle" in err.message
+    assert "stuck operation-nodes" in err.message
+    assert "p0@step0" in err.message and "p1@step0" in err.message
+    assert "recv tag='x'" in err.message
+
+
+def test_well_ordered_schedule_is_clean():
+    p0 = [{"kind": "send", "tag": "y", "peer": 1},
+          {"kind": "compute"},
+          {"kind": "recv", "tag": "x", "peer": 1}]
+    p1 = [{"kind": "recv", "tag": "y", "peer": 0},
+          {"kind": "send", "tag": "x", "peer": 0}]
+    assert check(schedule=[p0, p1], rules=("deadlock",)).ok
+
+
+def test_unmatched_message_rejected():
+    p0 = [{"kind": "send", "tag": "z", "peer": 1}]
+    p1 = [{"kind": "compute"}]
+    rep = check(schedule=[p0, p1], rules=("deadlock",))
+    err = next(d for d in rep.errors if d.rule == "deadlock")
+    assert "unmatched" in err.message and "p0@step0" in err.message
+
+
+def test_rendezvous_runner_rejects_fig6_before_any_thread():
+    """run_rendezvous_bsp_async refuses statically (plan time), and the
+    dynamic detector still exists behind static_check=False."""
+    from repro.exec.backend import DeadlockError, run_rendezvous_bsp_async
+
+    p0 = [{"kind": "recv", "tag": "x", "peer": 1},
+          {"kind": "send", "tag": "y", "peer": 1}]
+    p1 = [{"kind": "recv", "tag": "y", "peer": 0},
+          {"kind": "send", "tag": "x", "peer": 0}]
+    with pytest.raises(DeadlockError, match="statically at plan time"):
+        run_rendezvous_bsp_async([p0, p1])
+    with pytest.raises(DeadlockError, match="every live rank is parked"):
+        run_rendezvous_bsp_async([p0, p1], static_check=False)
+
+
+def test_dangling_scratch_read_flagged():
+    reader = _mk(("s", 123), None, False, "scratch-reader")
+    rep = check(post=[reader], rules=("deadlock",))
+    err = next(d for d in rep.errors if d.rule == "deadlock")
+    assert "stall" in err.message
+    # already delivered by an earlier drain: fine
+    assert check(post=[reader], scratch_available=[123],
+                 rules=("deadlock",)).ok
+    # written by an earlier planned op: fine
+    writer = _mk(("s", 123), None, True, "scratch-writer")
+    assert check(post=[writer, reader], rules=("deadlock",)).ok
+    # a pass dropped the producer: blamed
+    rep = check(pre=[writer, reader], post=[reader],
+                dropped={writer.uid: "evil"}, rules=("deadlock",))
+    err = next(d for d in rep.errors if d.rule == "deadlock")
+    assert err.pass_name == "evil"
+
+
+# ---------------------------------------------------------------------------
+# report surface
+# ---------------------------------------------------------------------------
+
+
+def test_report_and_error_formatting():
+    d = Diagnostic("plan", "error", "boom", ops=(1, 2), key=(1, (0,)),
+                   pass_name="fuse")
+    assert "plan/error" in str(d) and "fuse" in str(d)
+    with pytest.raises(ValueError):
+        Diagnostic("plan", "fatal", "bad severity")
+    rep = AnalysisReport(diagnostics=[d])
+    assert not rep.ok and rep.errors == [d]
+    with pytest.raises(VerificationError) as ei:
+        rep.raise_if_errors()
+    assert ei.value.report is rep
+    assert "static verification failed with 1 error" in str(ei.value)

@@ -250,6 +250,71 @@ def test_validate_trace_rejects_malformed():
         ]})
 
 
+def test_validate_trace_flow_endpoints():
+    """Every flow id needs both an 's' and an 'f' endpoint, and the
+    arrow must not point backwards in time."""
+    s = {"ph": "s", "pid": 10, "tid": 0, "ts": 1.0, "cat": "unblocks",
+         "id": 1, "name": "unblocks"}
+    f = {"ph": "f", "bp": "e", "pid": 2, "tid": 0, "ts": 2.0,
+         "cat": "unblocks", "id": 1, "name": "unblocks"}
+    validate_trace({"traceEvents": [s, f]})  # well-formed arrow
+    with pytest.raises(ValueError, match="missing its 'f'"):
+        validate_trace({"traceEvents": [s]})
+    with pytest.raises(ValueError, match="missing its 's'"):
+        validate_trace({"traceEvents": [f]})
+    with pytest.raises(ValueError, match="backwards in time"):
+        validate_trace({"traceEvents": [dict(s, ts=3.0), f]})
+    with pytest.raises(ValueError, match="without an id"):
+        validate_trace({"traceEvents": [{k: v for k, v in s.items()
+                                         if k != "id"}]})
+
+
+def test_validate_trace_drain_nesting():
+    """Async drain segments must open before they close, with no
+    double-open of the same (cat, id)."""
+    b = {"ph": "b", "pid": 1, "tid": 0, "ts": 0.0, "cat": "drain",
+         "id": "1", "name": "drain#1"}
+    e = {"ph": "e", "pid": 1, "tid": 0, "ts": 5.0, "cat": "drain",
+         "id": "1", "name": "drain#1"}
+    validate_trace({"traceEvents": [b, e]})
+    # interleaved segments of *different* ids are the concurrent-drain
+    # case the b/e encoding exists for — must stay valid
+    b2, e2 = dict(b, id="2"), dict(e, id="2")
+    validate_trace({"traceEvents": [b, b2, e, e2]})
+    with pytest.raises(ValueError, match="never opened"):
+        validate_trace({"traceEvents": [e, b]})
+    with pytest.raises(ValueError, match="opened twice"):
+        validate_trace({"traceEvents": [b, b, e, e]})
+
+
+def test_exported_traces_pass_extended_checks():
+    """Real exported traces (with flow arrows and interleaved drains)
+    satisfy the flow-endpoint and drain-nesting checks."""
+    with trace() as tr:
+        _program(nprocs=4, flush="async", latency=1e-3)
+    info = validate_trace(export_trace(tr))
+    assert info["n_events"] > 0
+
+
+def test_dropped_event_exported():
+    """Dead-store elimination shows up as a 'drop:fuse' instant in the
+    exported trace, carrying the eliminated op's uid."""
+    with trace() as tr:
+        with repro.runtime(nprocs=2, block_size=8, flush="async",
+                           passes=("fuse",), sync="barrier"):
+            a = repro.array(np.ones((16, 16)))
+            t = a * 3.0  # dead temp: never read after the del
+            del t
+            np.asarray(a + 1.0)
+    drops = [(uid, x) for _, et, uid, _, x in tr.events if et == "dropped"]
+    assert drops and all(p == "fuse" for _, p in drops)
+    doc = export_trace(tr)
+    names = [e["name"] for e in doc["traceEvents"]
+             if e.get("cat") == "plan" and e["ph"] == "i"]
+    assert any(n.startswith("drop:fuse") for n in names)
+    validate_trace(doc)
+
+
 def test_export_roundtrip_file(tmp_path):
     with trace() as tr:
         _program(nprocs=2, flush="async")

@@ -47,10 +47,14 @@ _BINOPS = {
 }
 
 
-def _run(prog, passes, sync="auto", force_seed=None):
+def _run(prog, passes, sync="auto", force_seed=None, verify="off",
+         verify_stats_out=None):
     from repro.core import darray as dnp
 
-    with repro.runtime(nprocs=4, block_size=3, passes=passes, sync=sync):
+    with repro.runtime(nprocs=4, block_size=3, passes=passes, sync=sync,
+                       verify=verify) as _rt:
+        if verify_stats_out is not None:
+            verify_stats_out.append(_rt.verify_stats)
         arrs = [
             dnp.array(np.arange(48.0).reshape(SHAPE) * (i + 1) - 20.0)
             for i in range(N_ARRAYS)
@@ -180,6 +184,50 @@ def test_concurrent_disjoint_cones_bit_identical_to_barrier(progs, seed):
             np.testing.assert_array_equal(
                 b, ref, err_msg=f"barrier diverged, passes={passes}"
             )
+
+
+@settings(max_examples=12, deadline=None)
+@given(prog=programs, seed=st.integers(0, 2**16))
+def test_builtin_pipelines_verify_clean(prog, seed):
+    """Static-verifier property: random programs × every built-in pass
+    pipeline × sync modes produce ZERO diagnostics under
+    ``verify="full"`` — no VerificationError, nothing collected.  Every
+    diagnostic on a real program is a pass bug, not noise."""
+    for pipeline in (("coalesce",), ("fuse",), ("coalesce", "fuse")):
+        for sync in ("barrier", "demand"):
+            sink = []
+            _run(prog, passes=pipeline, sync=sync, force_seed=seed,
+                 verify="full", verify_stats_out=sink)
+            vs = sink[0]
+            assert vs.n_diagnostics == 0, (
+                f"passes={pipeline} sync={sync}: {vs}"
+            )
+            assert vs.n_flushes_verified >= 1
+
+
+@settings(max_examples=12, deadline=None)
+@given(prog=programs, seed=st.integers(0, 2**16))
+def test_mutated_pipeline_always_flagged(prog, seed):
+    """The complement: a seeded dependence-inverting mutant appended to
+    the pipeline is *always* caught (the program is salted with one
+    guaranteed conflicting write pair, so every run has an inversion to
+    find)."""
+    from repro.analysis import VerificationError
+    from repro.api.registry import PASSES, register_pass
+
+    def evil_reverse(ctx):
+        if len(ctx.ops) > 1:
+            ctx.ops = list(reversed(ctx.ops))
+            ctx.dirty = True
+
+    register_pass("evil-reverse-prop", evil_reverse, overwrite=True)
+    try:
+        salted = [("fill", 0, 0, 0, 1.0), ("iadd", 0, 1)] + list(prog)
+        with pytest.raises(VerificationError):
+            _run(salted, passes=("evil-reverse-prop",), sync="barrier",
+                 verify="plan")
+    finally:
+        PASSES.unregister("evil-reverse-prop")
 
 
 @settings(max_examples=15, deadline=None)
