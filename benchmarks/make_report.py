@@ -93,8 +93,9 @@ def overlap_table():
         return
     for f in files:
         r = json.loads(f.read_text())
-        if r.get("section") in ("serve-load", "graph-lint"):
-            continue  # rendered by serve_load_table / graph_lint_table
+        if r.get("section") in ("serve-load", "serve-plan-cache",
+                                "graph-lint"):
+            continue  # rendered by their dedicated tables
         print(f"**{r.get('section', f.stem)}** — backend={r.get('backend')}, "
               f"nprocs={r.get('nprocs')}, α={r.get('latency_s', 0) * 1e3:.0f} ms, "
               f"overlap win {r.get('overlap_win', 0):.2f}×\n")
@@ -149,6 +150,42 @@ def serve_load_table():
           f"{r['variants']['concurrent']['latency_p99_s'] * 1e3:.1f} ms observed)\n")
 
 
+def serve_plan_cache_table():
+    """Render ``results/BENCH_serve_plan_cache.json`` (from
+    ``benchmarks.serve_load --suite plan-cache``): the repeated-shape
+    workload gating the plan-shape cache and off-lock planning."""
+    f = Path("results/BENCH_serve_plan_cache.json")
+    if not f.exists():
+        print("  (no BENCH_serve_plan_cache.json — run "
+              "`python -m benchmarks.serve_load --suite plan-cache`)")
+        return
+    r = json.loads(f.read_text())
+    print(f"**serve-plan-cache** — {r['clients']} clients, "
+          f"{r['requests']} repeated-shape requests, "
+          f"α={r['latency_s'] * 1e3:.0f} ms: "
+          f"{r['speedup_vs_serialized']:.2f}× vs serialized, "
+          f"hit rate {r['hit_rate'] * 100:.1f}%, "
+          f"lock-hold reduction {r['lock_hold_reduction']:.2f}×, "
+          f"corrupted results: {r['corruption']}\n")
+    print("| variant | req/s | p50 ms | p99 ms | lock hold µs (mean) "
+          "| plan+submit µs (mean) | cache hit % | batched cones |")
+    print("|---|---|---|---|---|---|---|---|")
+    for label in ("serialized", "concurrent-nocache", "concurrent-cache"):
+        v = r["variants"].get(label)
+        if not v:
+            continue
+        pc = v.get("plan_cache")
+        hit = f"{pc['hit_rate'] * 100:.1f}" if pc else "—"
+        b = v.get("batcher")
+        merged = str(b["n_merged"]) if b else "—"
+        print(f"| {label} | {v['throughput_rps']:.1f} | "
+              f"{v['latency_p50_s'] * 1e3:.1f} | "
+              f"{v['latency_p99_s'] * 1e3:.1f} | "
+              f"{v['lock_hold_mean_s'] * 1e6:.1f} | "
+              f"{v['plan_mean_s'] * 1e6:.1f} | {hit} | {merged} |")
+    print()
+
+
 def graph_lint_table():
     """Render ``results/BENCH_graph_lint.json`` (from
     ``python -m repro.analysis``): one row per linted program, with the
@@ -201,6 +238,9 @@ if __name__ == "__main__":
     if which in ("all", "serve"):
         print("### Multi-tenant serving load\n")
         serve_load_table()
+        print()
+        print("### Plan-shape cache under repeated-shape load\n")
+        serve_plan_cache_table()
         print()
     if which in ("all", "graph_lint"):
         print("### Graph lint (static verification)\n")

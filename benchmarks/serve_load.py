@@ -86,10 +86,12 @@ def barrier_reference(host: np.ndarray, nprocs: int, block: int) -> np.ndarray:
         return np.asarray(out)
 
 
-def run_variant(label, args, max_inflight):
+def run_variant(label, args, max_inflight, plan_cache=None,
+                batch_cones=False, verify="off"):
     """Drive ``--clients`` closed-loop tenant threads against one Server;
     returns (result dict, corruption count)."""
     import repro
+    from repro.serve import LatencyHistogram
 
     per_client = max(1, args.requests // args.clients)
     srv = repro.Server(
@@ -101,9 +103,17 @@ def run_variant(label, args, max_inflight):
         # capped; the queue must hold them all or the gate would measure
         # shedding, not throughput
         max_queue=args.clients,
+        plan_cache=plan_cache,
+        batch_cones=batch_cones,
+        verify=verify,
     )
     corrupt = [0]
     errors = []
+    # client-side record→submit cost (admission + lock wait + record +
+    # extract + plan + submit; everything but the drain wait) — the
+    # denominator of the lock-hold reduction gate
+    submit_hist = LatencyHistogram()
+    submit_lock = threading.Lock()
 
     def client(idx: int):
         host = tenant_host(1000 + idx, args.n)
@@ -112,7 +122,12 @@ def run_variant(label, args, max_inflight):
         sess = srv.session(f"tenant-{idx:03d}")
         try:
             for _ in range(per_client):
-                got = sess.request(fn).result()
+                t0 = time.perf_counter()
+                req = sess.request(fn)
+                dt = time.perf_counter() - t0
+                with submit_lock:
+                    submit_hist.record(dt)
+                got = req.result()
                 if not np.array_equal(got, expect):
                     corrupt[0] += 1
         except BaseException as exc:  # noqa: BLE001 - reported below
@@ -135,8 +150,6 @@ def run_variant(label, args, max_inflight):
                 f"{label}: client {idx} failed ({len(errors)} total)"
             ) from exc
         # aggregate latency across tenants (histograms merge exactly)
-        from repro.serve import LatencyHistogram
-
         hist = LatencyHistogram()
         n_rejected = n_failed = 0
         for st in srv.stats().values():
@@ -160,8 +173,148 @@ def run_variant(label, args, max_inflight):
             "n_failed": n_failed,
             "peak_inflight": adm.peak_inflight,
             "peak_queued": adm.peak_queued,
+            # off-lock planning accounting: the record lock covers only
+            # record + cone extraction; plan/verify/submit run after it
+            "lock_hold_p50_s": srv.lock_hold.quantile(0.5),
+            "lock_hold_p99_s": srv.lock_hold.quantile(0.99),
+            "lock_hold_mean_s": srv.lock_hold.mean,
+            # server-measured off-lock plan+verify+submit time: no
+            # admission or lock *wait* in either number, so
+            # (lock_hold + plan) / lock_hold is exactly the hold
+            # reduction vs planning under the lock
+            "plan_mean_s": srv.plan_time.mean,
+            "plan_p50_s": srv.plan_time.quantile(0.5),
+            "submit_p50_s": submit_hist.quantile(0.5),
+            "submit_mean_s": submit_hist.mean,
         }
+        cache = srv.runtime._plan_cache
+        if cache is not None:
+            result["plan_cache"] = {
+                "hits": cache.hits,
+                "misses": cache.misses,
+                "uncacheable": cache.n_uncacheable,
+                "hit_rate": cache.hit_rate,
+                "resident": len(cache),
+            }
+            # graph-lint the resident recipes: every cached plan must
+            # still prove clean under the static verifier
+            reports = srv.runtime.verify_cached_plans()
+            result["cached_plan_diagnostics"] = sum(
+                len(rep.diagnostics) for rep in reports
+            )
+        batcher = getattr(srv.runtime, "_batcher", None)
+        if batcher is not None:
+            result["batcher"] = {
+                "n_batches": batcher.n_batches,
+                "n_merged": batcher.n_merged,
+            }
     return result, corrupt[0]
+
+
+def run_plan_cache_suite(args) -> None:
+    """Repeated-shape workload: every tenant records the *same* request
+    structure (different data, same canonical cone shape), so the
+    plan-shape cache should hit on every request after each shape's cold
+    plan.  Three variants — serialized baseline, concurrent with the
+    cache off, concurrent with cache + cone batching — gated on:
+
+    1. zero corruption (as ever);
+    2. concurrent+cache ≥ ``--min-speedup`` × serialized throughput at
+       ≥ 8 clients;
+    3. cache hit rate ≥ ``--min-hit-rate`` after warmup;
+    4. median record-lock hold ≤ ½ of the median record→submit cost on
+       the cold-planning variant — i.e. off-lock planning at least
+       halves what the on-lock design would have held;
+    5. every resident cached recipe re-proves clean under the static
+       plan verifier (graph-lint for cached plans).
+
+    Writes ``results/BENCH_serve_plan_cache.json``.
+    """
+    inflight = args.inflight or min(args.clients, 16)
+    print(f"== serve plan-cache: {args.clients} clients, "
+          f"~{args.requests} requests (repeated shape), "
+          f"{args.nprocs} procs, alpha={args.latency * 1e3:.1f} ms ==")
+
+    ser, c_ser = run_variant("serialized", args, max_inflight=1,
+                             plan_cache=False, verify="plan")
+    cold, c_cold = run_variant("concurrent-nocache", args,
+                               max_inflight=inflight, plan_cache=False,
+                               verify="plan")
+    warm, c_warm = run_variant("concurrent-cache", args,
+                               max_inflight=inflight, plan_cache=True,
+                               batch_cones=True, verify="plan")
+
+    for r in (ser, cold, warm):
+        pc = r.get("plan_cache")
+        hit = f"hit={pc['hit_rate'] * 100:5.1f}%" if pc else "cache off  "
+        print(f"  {r['label']:<18s} {r['throughput_rps']:8.1f} req/s  "
+              f"p50={r['latency_p50_s'] * 1e3:7.2f} ms  {hit}  "
+              f"lock={r['lock_hold_mean_s'] * 1e6:7.1f} us  "
+              f"plan={r['plan_mean_s'] * 1e6:8.1f} us")
+
+    speedup = (warm["throughput_rps"] / ser["throughput_rps"]
+               if ser["throughput_rps"] > 0 else 0.0)
+    cache_ratio = (warm["throughput_rps"] / cold["throughput_rps"]
+                   if cold["throughput_rps"] > 0 else 0.0)
+    # lock-hold reduction on the cold-planning variant, from the
+    # server's own wait-free measurements with exact histogram means
+    # (medians are log-bucket-quantized): an on-lock design would hold
+    # the lock for record+extract+plan+submit; this one holds it for
+    # record+extract only
+    hold_ratio = (
+        (cold["lock_hold_mean_s"] + cold["plan_mean_s"])
+        / cold["lock_hold_mean_s"]
+        if cold["lock_hold_mean_s"] > 0 else float("inf")
+    )
+    hit_rate = warm["plan_cache"]["hit_rate"]
+    print(f"  concurrent+cache vs serialized: {speedup:.2f}x "
+          f"(gate >= {args.min_speedup}x at >= 8 clients)")
+    print(f"  cache on/off throughput: {cache_ratio:.2f}x; "
+          f"hit rate {hit_rate * 100:.1f}% "
+          f"(gate >= {args.min_hit_rate * 100:.0f}%)")
+    print(f"  lock-hold reduction (lock+plan vs lock): {hold_ratio:.2f}x "
+          f"(gate >= 2x: planning really runs off the lock)")
+
+    assert c_ser == 0 and c_cold == 0 and c_warm == 0, (
+        f"corruption: {c_ser}/{c_cold}/{c_warm} results diverged"
+    )
+    if args.clients >= 8:
+        assert speedup >= args.min_speedup, (
+            f"concurrent+cache only {speedup:.2f}x the serialized "
+            f"throughput (required >= {args.min_speedup}x)"
+        )
+    assert hit_rate >= args.min_hit_rate, (
+        f"plan-cache hit rate {hit_rate * 100:.1f}% below the "
+        f"{args.min_hit_rate * 100:.0f}% gate on a repeated-shape "
+        f"workload: {warm['plan_cache']}"
+    )
+    assert hold_ratio >= 2.0, (
+        f"lock+plan is only {hold_ratio:.2f}x the lock hold — planning "
+        f"off the lock shaves less than half the on-lock design's hold"
+    )
+    assert warm.get("cached_plan_diagnostics", 0) == 0, (
+        "cached plan recipes failed re-verification"
+    )
+
+    out = Path(args.cache_out)
+    out.parent.mkdir(parents=True, exist_ok=True)
+    out.write_text(json.dumps({
+        "section": "serve-plan-cache",
+        "clients": args.clients,
+        "requests": args.requests,
+        "nprocs": args.nprocs,
+        "block": args.block,
+        "n": args.n,
+        "latency_s": args.latency,
+        "speedup_vs_serialized": speedup,
+        "cache_throughput_ratio": cache_ratio,
+        "hit_rate": hit_rate,
+        "lock_hold_reduction": hold_ratio,
+        "corruption": c_ser + c_cold + c_warm,
+        "variants": {r["label"]: r for r in (ser, cold, warm)},
+    }, indent=2))
+    print(f"  wrote {out}")
+    print("serve-plan-cache: OK")
 
 
 def main() -> None:
@@ -186,8 +339,23 @@ def main() -> None:
                          "(enforced at >= 8 clients)")
     ap.add_argument("--p99-factor", type=float, default=8.0,
                     help="p99 budget as a multiple of the run's own mean")
+    ap.add_argument("--suite", choices=("load", "plan-cache", "all"),
+                    default="load",
+                    help="load = serialized-vs-concurrent gate; "
+                         "plan-cache = repeated-shape workload gating the "
+                         "plan-shape cache + off-lock planning")
+    ap.add_argument("--min-hit-rate", type=float, default=0.9,
+                    help="required plan-cache hit rate on the "
+                         "repeated-shape workload")
     ap.add_argument("--out", default="results/BENCH_serve_load.json")
+    ap.add_argument("--cache-out",
+                    default="results/BENCH_serve_plan_cache.json")
     args = ap.parse_args()
+
+    if args.suite in ("plan-cache", "all"):
+        run_plan_cache_suite(args)
+        if args.suite == "plan-cache":
+            return
 
     inflight = args.inflight or min(args.clients, 16)
     print(f"== serve load: {args.clients} clients, "

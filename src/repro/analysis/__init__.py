@@ -47,6 +47,7 @@ from .rules import AnalysisContext, view_region_footprint  # noqa: F401
 
 __all__ = [
     "check",
+    "check_cached_plans",
     "AnalysisContext",
     "AnalysisReport",
     "Diagnostic",
@@ -120,3 +121,26 @@ def check(
         get_rule(name)(ctx)
     ctx.report.rules_run = names
     return ctx.report
+
+
+def check_cached_plans(cache, rules: Sequence[str] = ("plan", "deadlock")):
+    """Re-verify every resident plan-shape-cache entry
+    (:class:`repro.core.plan_cache.PlanCache`) — each entry retains the
+    pre/post footprint snapshots, rewrite provenance, and drop records
+    of its insert-time plan, so the static plan verifier can re-prove
+    the cached recipe sound on demand (the ``graph-lint`` story for
+    cached plans).  Returns one :class:`AnalysisReport` per entry, in
+    cache order; callers decide whether errors raise
+    (:meth:`AnalysisReport.raise_if_errors`)."""
+    reports = []
+    for entry in cache.entries():
+        reports.append(check(
+            pre=entry.pre_views,
+            post=entry.post_views,
+            dead_bases=entry.dead_bases,
+            provenance=entry.provenance,
+            dropped=entry.dropped,
+            scratch_available=entry.scratch_available,
+            rules=rules,
+        ))
+    return reports

@@ -118,6 +118,18 @@ class ExecutionPolicy(_Replaceable):
     steal: bool = True
     steal_threshold: int = 4
     steal_latency: float = 1e-4
+    # plan-shape cache (repro.core.plan_cache): replay the recorded
+    # rewrite recipe on cones whose canonical structure was planned (and
+    # verified) before, skipping the pass pipeline and re-verification.
+    # None defers to the REPRO_PLAN_CACHE env var (unset/1 = on,
+    # 0/false/off = off); the cache only engages on demand-driven cone
+    # flushes with a non-empty pass pipeline.
+    plan_cache: Optional[bool] = None
+    # cross-tenant cone batching: merge small, mutually non-conflicting
+    # planned cones arriving from concurrent submitter threads into one
+    # executor submission (one global-lock round and one dispatch sweep
+    # for the whole group).  Async flush only.
+    batch_cones: bool = False
 
     def __post_init__(self):
         if self.scheduler not in registry.SCHEDULERS:
@@ -166,6 +178,15 @@ class ExecutionPolicy(_Replaceable):
             raise ValueError(
                 f"trace must be False, True, or an export path, got "
                 f"{self.trace!r}"
+            )
+        if self.plan_cache not in (None, True, False):
+            raise ValueError(
+                f"plan_cache must be None (env default), True, or False, "
+                f"got {self.plan_cache!r}"
+            )
+        if not isinstance(self.batch_cones, bool):
+            raise ValueError(
+                f"batch_cones must be a bool, got {self.batch_cones!r}"
             )
         p = self.passes
         if isinstance(p, (list, tuple)):

@@ -59,6 +59,7 @@ __all__ = [
     "Runtime",
     "ArrayBase",
     "FlushTicket",
+    "PendingFlush",
     "current_runtime",
     "execute_payload",
     "resolve_ref",
@@ -275,17 +276,25 @@ class FlushTicket:
     runtime's reaper may resolve it first.  Bookkeeping (stats merge,
     ticket-list removal) runs exactly once, on whichever thread resolves
     first; a ticket that failed re-raises its exception on every
-    subsequent ``wait()``."""
+    subsequent ``wait()``.
+
+    A ticket may be created *pending* (``pending=True``) before its
+    executor future exists: ``Runtime.extract_cone`` hands the ticket
+    out while still under the serving record lock, and
+    ``Runtime.submit_cone`` later binds the real future (``_bind``) —
+    or fails the ticket (``_fail``) — from outside the lock.  Waiters
+    that arrive in the window park on an Event until the binding
+    resolves, and ``add_done_callback`` queues callbacks until then."""
 
     __slots__ = ("_rt", "_fut", "_stats", "_resolved", "_tag", "_keys",
-                 "_regions", "_exc", "_lock")
+                 "_regions", "_exc", "_lock", "_bound", "_callbacks")
 
     def __init__(self, rt: "Runtime", fut=None, stats=None, tag=None, keys=None,
-                 regions=None):
+                 regions=None, pending=False):
         self._rt = rt
         self._fut = fut  # repro.exec Future -> WaitStats, or None
         self._stats = stats  # pre-completed result (sim flush / empty cone)
-        self._resolved = fut is None
+        self._resolved = fut is None and not pending
         self._tag = tag  # flush id — the trace segment this ticket joins
         # cone access footprint (reads, writes) from cone_access_keys;
         # None = whole-graph flush (conflicts with everything)
@@ -295,18 +304,73 @@ class FlushTicket:
         self._regions = regions
         self._exc: Optional[BaseException] = None
         self._lock = threading.Lock()
+        # set once the ticket has either a future or a local resolution;
+        # pending tickets (extracted but not yet submitted) leave it clear
+        self._bound = threading.Event()
+        if fut is not None or not pending:
+            self._bound.set()
+        self._callbacks: list = []  # queued while pending (unbound)
 
     def done(self) -> bool:
-        return self._resolved or self._fut.done()
+        return self._resolved or (self._fut is not None and self._fut.done())
 
     def add_done_callback(self, fn) -> None:
         """Run ``fn(self)`` when the drain resolves (immediately if it
         already has).  Runs on the resolving executor thread — keep it
         short and non-blocking."""
-        if self._fut is None:
+        with self._lock:
+            if self._fut is None and not self._resolved:
+                self._callbacks.append(fn)  # pending: registered at _bind
+                return
+            fut = self._fut
+        if fut is None:
             fn(self)
         else:
-            self._fut.add_done_callback(lambda _f: fn(self))
+            fut.add_done_callback(lambda _f: fn(self))
+
+    # -- deferred binding (extract_cone / submit_cone split) ---------------
+    def _bind(self, fut) -> None:
+        """Attach the executor future of a pending ticket (called by
+        ``Runtime.submit_cone`` once planning finished off-lock) and
+        flush the callbacks queued while unbound."""
+        with self._lock:
+            self._fut = fut
+            cbs = self._callbacks
+            self._callbacks = []
+        self._bound.set()
+        for fn in cbs:
+            fut.add_done_callback(lambda _f, fn=fn: fn(self))
+
+    def _resolve_local(self, stats=None) -> None:
+        """Resolve a pending ticket without an executor future (empty
+        cone, or a simulated cone drain that already ran inline)."""
+        with self._lock:
+            self._resolved = True
+            self._stats = stats
+            cbs = self._callbacks
+            self._callbacks = []
+        self._bound.set()
+        self._rt._ticket_discard(self)
+        for fn in cbs:
+            fn(self)
+
+    def _fail(self, exc: BaseException) -> bool:
+        """Fail a still-pending ticket (plan/verify/submit raised before
+        a future existed).  No-op — returning False — once a future is
+        bound or the ticket resolved: the future's own failure path owns
+        the bookkeeping then."""
+        with self._lock:
+            if self._resolved or self._fut is not None:
+                return False
+            self._resolved = True
+            self._exc = exc
+            cbs = self._callbacks
+            self._callbacks = []
+        self._bound.set()
+        self._rt._ticket_failed(self)
+        for fn in cbs:
+            fn(self)
+        return True
 
     def wait(self, timeout: Optional[float] = None):
         """Block until the drain completes.  Returns the flush's stats
@@ -319,15 +383,30 @@ class FlushTicket:
                 if self._exc is not None:
                     raise self._exc
                 return self._stats
+            fut = self._fut
+        if fut is None:
+            # pending ticket: another thread is still planning/submitting
+            # this cone — park until it binds a future or resolves
+            if not self._bound.wait(timeout):
+                raise TimeoutError(
+                    f"flush #{self._tag}: cone still being planned/"
+                    f"submitted after {timeout} s"
+                )
+            with self._lock:
+                if self._resolved:
+                    if self._exc is not None:
+                        raise self._exc
+                    return self._stats
+                fut = self._fut
         # a thread blocking on a drain is the third wait reason: a
         # barrier (whole-graph flush, or joining a demand-driven cone)
         col = _obs.CURRENT
-        span = col is not None and not self._fut.done()
+        span = col is not None and not fut.done()
         label = _wait_label()
         if span:
             col.wait_start(label, "barrier")
         try:
-            res = self._fut.result(timeout)
+            res = fut.result(timeout)
         except TimeoutError:
             if span:
                 col.wait_end(label, "barrier", self._tag)
@@ -349,6 +428,86 @@ class FlushTicket:
                 self._stats = res
                 self._rt._ticket_done(self, res)
         return res
+
+
+@dataclass
+class PendingFlush:
+    """The record-side half of a demand-driven flush, produced by
+    :meth:`Runtime.extract_cone` under the caller's record serialization
+    and consumed by :meth:`Runtime.submit_cone` *outside* it.
+
+    Everything the plan+submit stage needs is captured here at
+    extraction time: the cone's own dependency system (``deps``), its
+    access-key footprint (``keys`` — what ``_join_conflicting`` keys
+    off), the dead-base set already restricted to bases no remainder
+    operation touches, and the flush id.  ``deps is None`` marks an
+    empty cone: nothing to drain, but the submit stage must still join
+    in-flight writers of the requested blocks (``empty_read`` carries
+    the resolved read keys / base ids for that join)."""
+
+    ticket: FlushTicket
+    deps: Optional[DependencySystem]
+    keys: tuple  # (reads, writes) from cone_access_keys
+    dead: set
+    fid: Optional[int]
+    n_total: int
+    empty_read: Optional[tuple] = None  # (read_keys, base_ids), empty cone
+
+
+class _ConeBatcher:
+    """Cross-tenant cone batching: merge several small, mutually
+    non-conflicting planned cones arriving from concurrent submitter
+    threads into one executor submission (``AsyncExecutor.submit_many``)
+    — one global-lock round, one worker wake, one dispatch sweep for
+    the whole group instead of per cone.
+
+    Leader/follower: the first thread to enqueue becomes the leader and
+    loops submitting whatever has accumulated (up to ``max_batch`` per
+    round); threads that enqueue while a leader is active just leave
+    their cone in the queue — their ticket is bound to its future by
+    whichever leader round picks it up.  Co-queued cones are mutually
+    non-conflicting *by construction*: a conflicting later cone blocks
+    in ``_join_conflicting`` on the earlier cone's (still unbound)
+    ticket before it ever reaches the batcher."""
+
+    __slots__ = ("_rt", "_lock", "_pending", "_leader", "max_batch",
+                 "n_batches", "n_merged")
+
+    def __init__(self, rt: "Runtime", max_batch: int = 8):
+        self._rt = rt
+        self._lock = threading.Lock()
+        self._pending: list = []  # (deps, hints, ticket) triples
+        self._leader = False
+        self.max_batch = max_batch
+        self.n_batches = 0
+        self.n_merged = 0
+
+    def enqueue(self, deps, hints, ticket) -> None:
+        with self._lock:
+            self._pending.append((deps, hints, ticket))
+            if self._leader:
+                return  # the active leader's next round takes it
+            self._leader = True
+        try:
+            while True:
+                with self._lock:
+                    batch = self._pending[: self.max_batch]
+                    del self._pending[: len(batch)]
+                    if not batch:
+                        self._leader = False
+                        return
+                    self.n_batches += 1
+                    if len(batch) > 1:
+                        self.n_merged += len(batch)
+                self._rt._submit_batch(batch)
+        except BaseException:
+            with self._lock:
+                leftover = self._pending
+                self._pending = []
+                self._leader = False
+            for _d, _h, t in leftover:
+                t._fail(RuntimeError("cone batch submission failed"))
+            raise
 
 
 class ArrayBase:
@@ -391,6 +550,8 @@ class Runtime:
         sync: str = "auto",
         trace: Union[bool, str] = False,
         verify: str = "off",
+        plan_cache: Optional[bool] = None,
+        batch_cones: bool = False,
     ):
         self.nprocs = nprocs
         self.block_size = block_size
@@ -520,6 +681,34 @@ class Runtime:
             from repro.analysis import VerifyStats
 
             self.verify_stats = VerifyStats()
+        # -- plan-shape cache: a cone whose canonical structural signature
+        # was planned (and verified) once replays the recorded rewrite
+        # recipe instead of re-running the pass pipeline.  Kwarg wins;
+        # None defers to REPRO_PLAN_CACHE (default: enabled).
+        if plan_cache is None:
+            env = os.environ.get("REPRO_PLAN_CACHE", "")
+            plan_cache = env not in ("0", "false", "False", "off")
+        self.plan_cache_enabled = bool(plan_cache) and bool(self.passes)
+        self._plan_cache = None
+        if self.plan_cache_enabled:
+            from .plan_cache import PlanCache
+
+            self._plan_cache = PlanCache()
+        # guards plan_stats / verify_stats / last_verify_report: with the
+        # plan stage off the record lock, several submitting threads
+        # plan (and verify) concurrently
+        self._stats_lock = threading.Lock()
+        # guards lazy executor/backend/channel construction (first
+        # concurrent submit_cone calls race to build them)
+        self._exec_lock = threading.Lock()
+        # -- cross-tenant cone batching: merge several small,
+        # non-conflicting in-queue cones into one executor submit round
+        self.batch_cones = bool(batch_cones)
+        self._batcher = (
+            _ConeBatcher(self)
+            if self.batch_cones and flush_backend == "async"
+            else None
+        )
 
     @classmethod
     def from_config(cls, config=None, policy=None) -> "Runtime":
@@ -554,6 +743,8 @@ class Runtime:
             sync=policy.resolved_sync,
             trace=policy.trace,
             verify=getattr(policy, "verify", "off"),
+            plan_cache=getattr(policy, "plan_cache", None),
+            batch_cones=getattr(policy, "batch_cones", False),
         )
 
     # -- context management -------------------------------------------------
@@ -1000,6 +1191,13 @@ class Runtime:
         serialized (recording is single-threaded; the serve layer's
         record lock guarantees this).
 
+        A cone flush is the :meth:`extract_cone` + :meth:`submit_cone`
+        pair run back to back: record-side extraction (which must stay
+        under the caller's record serialization) followed by
+        plan + verify + executor submission (which does not — the serve
+        layer calls the two halves separately, so planning runs off the
+        record lock).
+
         The flush remains a three-stage pipeline: the (cone of the)
         *recorded* graph goes through the *plan* stage
         (:func:`repro.core.plan.plan` runs the configured pass pipeline
@@ -1007,65 +1205,22 @@ class Runtime:
         scheduler or the async executor."""
         if self._closed:
             raise RuntimeError("Runtime is closed")
-        from .graph import cone_access_keys
-
-        if targets is None:
-            self._sync_outstanding()  # a barrier: join every drain
-        else:
-            self._reap_tickets()  # fold finished drains' stats, keep going
+        if targets is not None:
+            handle = self.extract_cone(targets)
+            ticket = self.submit_cone(handle, cleanup=True)
+            if wait:
+                res = ticket.wait()
+                self._barrier_cleanup()
+                return res
+            return ticket
+        self._sync_outstanding()  # a barrier: join every drain
         deps = self.deps
         dead = set(self._dead_bases)
         n_total = deps.n_pending
-        keys = None
-        regions = None
-        if targets is not None:
-            cone_ops, rest_ops = producer_cone(
-                deps.pending_ops(), self._resolve_targets(targets)
-            )
-            # even an empty cone must serialize against in-flight writes
-            # to the requested blocks: the caller is about to *read* them
-            keys = cone_access_keys(cone_ops)
-            if not cone_ops:
-                read_keys = {
-                    k for k in self._resolve_targets(targets)
-                    if isinstance(k, tuple)
-                }
-                ids = {
-                    k for k in self._resolve_targets(targets)
-                    if not isinstance(k, tuple)
-                }
-                self._join_conflicting((read_keys, set()), base_ids=ids)
-                self._barrier_cleanup()
-                return None if wait else FlushTicket(self)
-            if self.verify_mode == "full":
-                # region-level race oracle: before deciding (by key-level
-                # cones_conflict) which in-flight drains to join, prove
-                # the key-granular answer sound at Region granularity.
-                # Runs before _join_conflicting so a failure leaves every
-                # in-flight drain untouched.
-                from .graph import cone_region_footprint
-
-                _t0 = _time.perf_counter()
-                regions = cone_region_footprint(cone_ops)
-                self._verify_races(keys, regions)
-                self.verify_stats.verify_seconds += (
-                    _time.perf_counter() - _t0
-                )
-            self._join_conflicting(keys)
-            # a GC'd base only licenses dead-store elimination when no
-            # *remainder* operation still touches it: the cone may hold a
-            # dead temp's producer (pulled in as an anti-dependency) while
-            # its consumer stays pending — that store is NOT dead yet
-            dead -= {
-                acc.key[0] for op in rest_ops for acc in op.accesses
-            }
-            self.deps = DependencySystem.rebuild(rest_ops)
-            deps = DependencySystem.rebuild(cone_ops)
-        else:
-            if deps.n_pending == 0:
-                self._barrier_cleanup()
-                return None if wait else FlushTicket(self)
-            self.deps = DependencySystem()  # recording continues here
+        if deps.n_pending == 0:
+            self._barrier_cleanup()
+            return None if wait else FlushTicket(self)
+        self.deps = DependencySystem()  # recording continues here
         fid = self.flush_count + 1
         col = _obs.CURRENT
         if col is not None:
@@ -1087,9 +1242,10 @@ class Runtime:
 
                 _t0 = _time.perf_counter()
                 pre_views = snapshot_ops(deps.pending_ops())
-                self.verify_stats.verify_seconds += (
-                    _time.perf_counter() - _t0
-                )
+                with self._stats_lock:
+                    self.verify_stats.verify_seconds += (
+                        _time.perf_counter() - _t0
+                    )
             planned = run_plan(
                 deps,
                 self.passes,
@@ -1098,14 +1254,15 @@ class Runtime:
             )
             deps = planned.deps
             hints = planned.hints
-            self.plan_stats.merge(planned.stats)
+            with self._stats_lock:
+                self.plan_stats.merge(planned.stats)
             if pre_views is not None:
                 self._verify_plan(pre_views, planned, dead)
         self.flush_count += 1
         self._recorded_since_flush = self.deps.n_pending
         if self.flush_backend == "async":
-            ticket = self._flush_async(deps, hints, fid, keys=keys,
-                                       regions=regions)
+            ticket = self._flush_async(deps, hints, fid, keys=None,
+                                       regions=None)
             if wait:
                 res = ticket.wait()
                 self._barrier_cleanup()
@@ -1127,6 +1284,259 @@ class Runtime:
         self.result.merge(res)
         self._barrier_cleanup()
         return res if wait else FlushTicket(self, stats=res)
+
+    # -- the record/plan split (cone flushes) -------------------------------
+    def extract_cone(self, targets) -> PendingFlush:
+        """Record-side half of a cone flush: split the recorded graph
+        into the dependency cone of ``targets`` and the remainder, and
+        return a :class:`PendingFlush` whose (still pending) ticket is
+        already registered with the runtime.
+
+        This is the only part of a cone flush that reads or writes
+        recording state (``self.deps``, the dead-base set, the flush
+        counter), so it is the only part that must run under the
+        caller's record serialization — the serve layer holds its
+        record lock exactly across this call and releases it before
+        :meth:`submit_cone` plans and submits the cone."""
+        if self._closed:
+            raise RuntimeError("Runtime is closed")
+        from .graph import cone_access_keys
+
+        self._reap_tickets()  # fold finished drains' stats, keep going
+        resolved = self._resolve_targets(targets)
+        dead = set(self._dead_bases)
+        n_total = self.deps.n_pending
+        cone_ops, rest_ops = producer_cone(self.deps.pending_ops(), resolved)
+        # even an empty cone must serialize against in-flight writes
+        # to the requested blocks: the caller is about to *read* them
+        keys = cone_access_keys(cone_ops)
+        if not cone_ops:
+            read_keys = {k for k in resolved if isinstance(k, tuple)}
+            ids = {k for k in resolved if not isinstance(k, tuple)}
+            return PendingFlush(
+                ticket=FlushTicket(self, pending=True),
+                deps=None,
+                keys=keys,
+                dead=set(),
+                fid=None,
+                n_total=n_total,
+                empty_read=(read_keys, ids),
+            )
+        regions = None
+        if self.verify_mode == "full":
+            # region-level race oracle against the in-flight drains,
+            # BEFORE the extraction commits: a failure aborts the flush
+            # with the recorded graph and every in-flight drain
+            # untouched.  It stays under the caller's record
+            # serialization because "in-flight" is defined by extraction
+            # order — and it stamps the regions on the pending ticket,
+            # so later extractions can race-check against this cone
+            # while it is still being planned off the lock.
+            from .graph import cone_region_footprint
+
+            _t0 = _time.perf_counter()
+            regions = cone_region_footprint(cone_ops)
+            self._verify_races(keys, regions)
+            with self._stats_lock:
+                self.verify_stats.verify_seconds += (
+                    _time.perf_counter() - _t0
+                )
+        # a GC'd base only licenses dead-store elimination when no
+        # *remainder* operation still touches it: the cone may hold a
+        # dead temp's producer (pulled in as an anti-dependency) while
+        # its consumer stays pending — that store is NOT dead yet
+        dead -= {acc.key[0] for op in rest_ops for acc in op.accesses}
+        self.deps = DependencySystem.rebuild(rest_ops)
+        cone_deps = DependencySystem.rebuild(cone_ops)
+        self.flush_count += 1
+        fid = self.flush_count
+        self._recorded_since_flush = self.deps.n_pending
+        # the pending ticket joins the outstanding list NOW, before the
+        # record serialization is released: a later cone that conflicts
+        # with this one must find it and wait, even though its future
+        # does not exist yet (extraction order is the total order
+        # _join_conflicting's `before=` bound keys off)
+        ticket = FlushTicket(self, pending=True, tag=fid, keys=keys,
+                             regions=regions)
+        with self._ticket_lock:
+            self._tickets.append(ticket)
+        col = _obs.CURRENT
+        if col is not None:
+            col.flush_begin(
+                fid, n_total, cone_deps.n_pending, self.sync_mode,
+                self.flush_backend,
+            )
+            col.counter("cone-ops", cone_deps.n_pending)
+        return PendingFlush(
+            ticket=ticket,
+            deps=cone_deps,
+            keys=keys,
+            dead=dead,
+            fid=fid,
+            n_total=n_total,
+        )
+
+    def submit_cone(self, handle: PendingFlush, cleanup: bool = False) -> FlushTicket:
+        """Plan, verify, and submit an extracted cone — the half of a
+        cone flush that needs **no** record serialization: it touches
+        only the :class:`PendingFlush`'s own state plus thread-safe
+        runtime structures, so concurrent client threads may plan and
+        submit their cones in parallel.
+
+        Any failure (verification, planning, executor submission) fails
+        the handle's ticket — waiters and done-callbacks observe it —
+        and re-raises on this thread.  ``cleanup=True`` additionally
+        runs barrier housekeeping on the inline paths (empty cone /
+        simulated drain); callers running off the record lock must
+        leave it False, since scratch recycling races with concurrent
+        recording."""
+        ticket = handle.ticket
+        try:
+            self._submit_cone_inner(handle, cleanup)
+        except BaseException as exc:
+            ticket._fail(exc)
+            raise
+        return ticket
+
+    def _submit_cone_inner(self, handle: PendingFlush, cleanup: bool) -> None:
+        ticket = handle.ticket
+        if handle.deps is None:  # empty cone: join in-flight writers only
+            read_keys, ids = handle.empty_read
+            self._join_conflicting((read_keys, set()), base_ids=ids)
+            if cleanup:
+                self._barrier_cleanup()
+            ticket._resolve_local()
+            return
+        deps = handle.deps
+        # (verify="full"'s race oracle already ran in extract_cone,
+        # under the record serialization that defines "in-flight")
+        self._join_conflicting(handle.keys, before=ticket)
+        deps, hints = self._plan_cone(handle)
+        if self.flush_backend == "async":
+            if self._batcher is not None:
+                self._batcher.enqueue(deps, hints, ticket)
+            else:
+                executor = self._ensure_executor()
+                fut = executor.submit(
+                    deps,
+                    batch_dispatch=bool(hints.get("batch_dispatch")),
+                    tag=handle.fid,
+                )
+                ticket._bind(fut)
+            return
+        # simulated backend (sync="demand" with flush_backend="sim"):
+        # the drain runs inline on this thread, as before the split
+        from repro.api.registry import get_scheduler
+
+        col = _obs.CURRENT
+        if col is not None:
+            col.drain_begin(handle.fid, deps.n_pending, self.nprocs)
+        res = get_scheduler(self.mode)(
+            deps,
+            self.cluster,
+            executor=self._execute if self.execute else None,
+        )
+        if col is not None:
+            col.drain_end(handle.fid)
+        self.result.merge(res)
+        if cleanup:
+            ticket._resolve_local(res)
+            self._barrier_cleanup()
+        else:
+            ticket._resolve_local(res)
+
+    def _plan_cone(self, handle: PendingFlush):
+        """Plan stage of one extracted cone: plan-shape cache hit →
+        replay the recorded rewrite recipe; miss → run the pass
+        pipeline, verify, and insert the recipe.  Returns the planned
+        ``(deps, hints)``.  Thread-safe: shared counters are folded
+        under ``_stats_lock``, the cache locks internally."""
+        deps = handle.deps
+        if not self.passes:
+            return deps, {}
+        from .plan import plan as run_plan
+
+        pending = deps.pending_ops()
+        cache = self._plan_cache
+        col = _obs.CURRENT
+        sig = None
+        if cache is not None:
+            sig = cache.signature(pending, handle.dead, self.passes,
+                                  self.storage)
+            if sig is not None:
+                entry = cache.lookup(sig)
+                if entry is not None:
+                    if col is not None:
+                        col.plan_cache(handle.fid, True, len(pending))
+                    new_deps, hints, stats = cache.replay(
+                        entry, deps, pending
+                    )
+                    with self._stats_lock:
+                        self.plan_stats.merge(stats)
+                    return new_deps, hints
+            if col is not None:
+                col.plan_cache(handle.fid, False, len(pending))
+        pre_views = None
+        if self.verify_mode != "off" or sig is not None:
+            # snapshot footprints BEFORE planning: passes rewrite
+            # payloads/accesses in place, so the pre-plan op objects are
+            # not a record of the pre-plan program — immutable OpViews
+            # are.  The cache needs the same snapshot: a cached plan
+            # must stay re-verifiable on demand (verify_cached_plans).
+            from repro.analysis import snapshot_ops
+
+            _t0 = _time.perf_counter()
+            pre_views = snapshot_ops(pending)
+            if self.verify_mode != "off":
+                with self._stats_lock:
+                    self.verify_stats.verify_seconds += (
+                        _time.perf_counter() - _t0
+                    )
+        pre_args = None
+        if sig is not None:
+            # pre-plan map argument tuples: const folding mutates
+            # MapPayload.args in place, so the diff against these is the
+            # recipe's patch list
+            pre_args = {
+                op.uid: op.payload.args
+                for op in pending
+                if isinstance(op.payload, MapPayload)
+            }
+        planned = run_plan(
+            deps, self.passes, dead_bases=handle.dead, storage=self.storage
+        )
+        with self._stats_lock:
+            self.plan_stats.merge(planned.stats)
+        if self.verify_mode != "off":
+            self._verify_plan(pre_views, planned, handle.dead)
+        if sig is not None:
+            cache.insert(
+                sig,
+                pending,
+                pre_args,
+                planned,
+                handle.dead,
+                pre_views=pre_views,
+                scratch_available=set(self.scratch),
+            )
+        return planned.deps, planned.hints
+
+    def verify_cached_plans(self):
+        """Re-run the static plan verifier over every resident
+        plan-cache entry (each was verified — or at least verifiable —
+        once at insert; this proves the cached recipes are *still*
+        sound on demand, e.g. from the ``graph-lint`` CI job).  Returns
+        the list of :class:`repro.analysis.AnalysisReport`; raises
+        :class:`repro.analysis.VerificationError` on any error-severity
+        finding."""
+        if self._plan_cache is None:
+            return []
+        from repro.analysis import check_cached_plans
+
+        reports = check_cached_plans(self._plan_cache)
+        for r in reports:
+            r.raise_if_errors()
+        return reports
 
     @staticmethod
     def _resolve_targets(targets) -> set:
@@ -1169,9 +1579,44 @@ class Runtime:
         )
         return FlushTicket(self, fut=fut, tag=tag, keys=keys, regions=regions)
 
+    def _submit_batch(self, batch) -> None:
+        """Submit one batcher round — ``(deps, hints, ticket)`` triples
+        of mutually non-conflicting planned cones — to the executor and
+        bind each ticket to its future.  A single cone goes through the
+        plain ``submit`` path; several go through ``submit_many`` (one
+        global-lock round for the group).  On failure every ticket in
+        the round is failed before re-raising."""
+        try:
+            executor = self._ensure_executor()
+            if len(batch) == 1:
+                deps, hints, ticket = batch[0]
+                fut = executor.submit(
+                    deps,
+                    batch_dispatch=bool(hints.get("batch_dispatch")),
+                    tag=ticket._tag,
+                )
+                ticket._bind(fut)
+                return
+            items = [(deps, ticket._tag) for deps, _h, ticket in batch]
+            bd = any(bool(h.get("batch_dispatch")) for _d, h, _t in batch)
+            futs = executor.submit_many(items, batch_dispatch=bd)
+            for (_d, _h, ticket), fut in zip(batch, futs):
+                ticket._bind(fut)
+        except BaseException as exc:
+            for _d, _h, ticket in batch:
+                ticket._fail(exc)
+            raise
+
     def _ensure_executor(self):
         from repro.exec import AsyncExecutor, make_backend, make_channel
 
+        with self._exec_lock:
+            return self._ensure_executor_locked(
+                AsyncExecutor, make_backend, make_channel
+            )
+
+    def _ensure_executor_locked(self, AsyncExecutor, make_backend,
+                                make_channel):
         if self._exec_backend_obj is None:
             self._exec_backend_obj = make_backend(
                 self.exec_backend, self.storage, self.scratch
@@ -1232,13 +1677,19 @@ class Runtime:
                 with self._ticket_lock:
                     self._deferred_errors.append(exc)
 
-    def _join_conflicting(self, keys, base_ids=None) -> None:
+    def _join_conflicting(self, keys, base_ids=None, before=None) -> None:
         """Join every outstanding ticket whose cone footprint conflicts
         with ``keys`` (``(reads, writes)``); tickets with no footprint
         (whole-graph flushes) conflict with everything.  ``base_ids``
         extends the read set to *all* blocks of the given bases (a
         whole-base readback with nothing pending must still wait for
-        in-flight writers of any of its blocks)."""
+        in-flight writers of any of its blocks).
+
+        ``before`` bounds the scan at the caller's own (still pending)
+        ticket: with planning off the record lock, several threads join
+        concurrently, and each may only wait on tickets *extracted
+        earlier* than its own — extraction order is a total order, so
+        waiting only backwards keeps the wait graph acyclic."""
         from .graph import cones_conflict
 
         def _conflicts(t: FlushTicket) -> bool:
@@ -1254,7 +1705,13 @@ class Runtime:
 
         while True:
             with self._ticket_lock:
-                t = next((t for t in self._tickets if _conflicts(t)), None)
+                t = None
+                for cand in self._tickets:
+                    if cand is before:
+                        break
+                    if _conflicts(cand):
+                        t = cand
+                        break
             if t is None:
                 return
             t.wait()  # propagates the conflicting drain's failure
@@ -1280,11 +1737,12 @@ class Runtime:
             scratch_available=set(self.scratch),
             rules=("plan", "deadlock"),
         )
-        stats = self.verify_stats
-        stats.verify_seconds += _time.perf_counter() - _t0
-        stats.n_flushes_verified += 1
-        stats.n_diagnostics += len(report.diagnostics)
-        self.last_verify_report = report
+        with self._stats_lock:
+            stats = self.verify_stats
+            stats.verify_seconds += _time.perf_counter() - _t0
+            stats.n_flushes_verified += 1
+            stats.n_diagnostics += len(report.diagnostics)
+            self.last_verify_report = report
         report.raise_if_errors()
 
     def _verify_races(self, keys, regions) -> None:
@@ -1310,37 +1768,47 @@ class Runtime:
                 and t._regions is not None
             ]
         report = AnalysisReport(rules_run=("races",))
-        for t in inflight:
-            stats.n_race_checks += 1
-            kc = cones_conflict(t._keys, keys)
-            rk = region_footprints_conflict(t._regions, regions)
-            if rk is not None and not kc:
-                report.diagnostics.append(Diagnostic(
-                    rule="races",
-                    severity=ERROR,
-                    message=(
-                        f"region-level conflict with in-flight drain "
-                        f"#{t._tag} that key-level cones_conflict missed "
-                        f"— the concurrent-drain oracle is unsound"
-                    ),
-                    ops=(t._tag,),
-                    key=rk,
-                ))
-            elif kc:
-                stats.n_key_conflicts += 1
-                report.n_key_conflicts += 1
-                if rk is None:
-                    stats.n_region_false_positives += 1
-                    report.n_region_false_positives += 1
+        with self._stats_lock:
+            for t in inflight:
+                stats.n_race_checks += 1
+                kc = cones_conflict(t._keys, keys)
+                rk = region_footprints_conflict(t._regions, regions)
+                if rk is not None and not kc:
+                    report.diagnostics.append(Diagnostic(
+                        rule="races",
+                        severity=ERROR,
+                        message=(
+                            f"region-level conflict with in-flight drain "
+                            f"#{t._tag} that key-level cones_conflict missed "
+                            f"— the concurrent-drain oracle is unsound"
+                        ),
+                        ops=(t._tag,),
+                        key=rk,
+                    ))
+                elif kc:
+                    stats.n_key_conflicts += 1
+                    report.n_key_conflicts += 1
+                    if rk is None:
+                        stats.n_region_false_positives += 1
+                        report.n_region_false_positives += 1
+            if report.diagnostics:
+                stats.n_diagnostics += len(report.diagnostics)
+                self.last_verify_report = report
         if report.diagnostics:
-            stats.n_diagnostics += len(report.diagnostics)
-            self.last_verify_report = report
             report.raise_if_errors()
 
     def _ticket_done(self, ticket: FlushTicket, res) -> None:
         with self._ticket_lock:
             if res is not None:
                 self._ensure_exec_stats().merge(res)
+            if ticket in self._tickets:
+                self._tickets.remove(ticket)
+
+    def _ticket_discard(self, ticket: FlushTicket) -> None:
+        """Drop a locally-resolved ticket (empty cone / simulated drain)
+        from the outstanding list.  Stats were already merged by the
+        resolver; the executor is untouched."""
+        with self._ticket_lock:
             if ticket in self._tickets:
                 self._tickets.remove(ticket)
 

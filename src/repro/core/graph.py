@@ -33,6 +33,7 @@ __all__ = [
     "regions_overlap",
     "producer_cone",
     "cone_access_keys",
+    "cone_base_ids",
     "cones_conflict",
     "cone_region_footprint",
     "region_footprints_conflict",
@@ -181,6 +182,21 @@ def cone_access_keys(ops: list[OperationNode]) -> tuple[set, set]:
         for acc in op.accesses:
             (writes if acc.write else reads).add(acc.key)
     return reads, writes
+
+
+def cone_base_ids(ops: list[OperationNode]) -> set:
+    """The array-base ids a cone touches (scratch keys excluded).  The
+    plan-shape cache keys on this to restrict the flush's dead-base set
+    to the bases the pass pipeline can actually see — a dead base no
+    cone operation touches cannot change what the passes do, so it must
+    not fragment the cache."""
+    out: set = set()
+    for op in ops:
+        for acc in op.accesses:
+            k = acc.key
+            if isinstance(k, tuple) and k and k[0] != "s":
+                out.add(k[0])
+    return out
 
 
 def cones_conflict(a: tuple[set, set], b: tuple[set, set]) -> bool:

@@ -171,6 +171,11 @@ class PlanResult:
     # PlanContext.note_rewrite / note_drop) — the plan verifier's input
     provenance: dict = field(default_factory=dict)
     dropped: dict = field(default_factory=dict)
+    # the final planned operation list in program order (``ctx.ops``) —
+    # what the plan-shape cache walks to record a replayable recipe
+    # (positions in this tuple, joined with ``provenance``/``dropped``,
+    # say which pass produced every node)
+    ops: tuple = ()
 
 
 def resolve_pipeline(
@@ -238,7 +243,9 @@ def plan(
             col.plan_pass(name, n_before, len(ctx.ops))
     stats.n_ops_out = len(ctx.ops)
     new_deps = type(deps).rebuild(ctx.ops) if ctx.dirty else deps
-    return PlanResult(new_deps, ctx.hints, stats, ctx.provenance, ctx.dropped)
+    return PlanResult(
+        new_deps, ctx.hints, stats, ctx.provenance, ctx.dropped, tuple(ctx.ops)
+    )
 
 
 # ---------------------------------------------------------------------------

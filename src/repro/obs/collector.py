@@ -49,6 +49,10 @@ etype                   meaning / extra payload
                         on end ``(reason, ender_uid)`` — the op/message
                         whose arrival ended the wait
 ``counter``             gauge sample; uid = counter name, extra = value
+``plan-cache``          plan stage consulted the plan-shape cache; uid =
+                        flush id, extra = ``(hit, n_ops)``
+``lock-held``           a serving lock was held; uid = lock label (e.g.
+                        ``"record"``), extra = held seconds
 ======================  =====================================================
 """
 from __future__ import annotations
@@ -142,6 +146,30 @@ class TraceCollector:
         self.n_emitted += 1
         self.events.append(
             (time.perf_counter() - self.t0, "plan-pass", None, None, (name, n_in, n_out))
+        )
+
+    def plan_cache(self, fid, hit: bool, n_ops: int) -> None:
+        """The plan stage consulted the plan-shape cache for flush
+        ``fid``: ``hit`` says whether a cached recipe was replayed
+        (skipping the pass pipeline and re-verification), ``n_ops`` is
+        the cone's pre-plan operation count."""
+        self.n_emitted += 1
+        self.events.append(
+            (
+                time.perf_counter() - self.t0,
+                "plan-cache",
+                fid,
+                "main",
+                (bool(hit), n_ops),
+            )
+        )
+
+    def lock_held(self, label: str, seconds: float) -> None:
+        """A serving-layer lock (``label``, e.g. ``"record"``) was held
+        for ``seconds`` — the record/plan split's success metric."""
+        self.n_emitted += 1
+        self.events.append(
+            (time.perf_counter() - self.t0, "lock-held", label, "main", seconds)
         )
 
     # -- flush / drain segments ------------------------------------------

@@ -189,6 +189,16 @@ def export_trace(collector, path: Optional[str] = None, full: bool = False) -> d
                        "tid": 0, "ts": t,
                        "args": {"uid": uid, "label": label_of(uid),
                                 "pass": extra}})
+        elif et == "plan-cache":
+            hit, n_ops = extra
+            te.append({"ph": "i", "s": "t", "cat": "plan",
+                       "name": f"plan-cache:{'hit' if hit else 'miss'}",
+                       "pid": PID_RUNTIME, "tid": 0, "ts": t,
+                       "args": {"flush": uid, "ops": n_ops}})
+        elif et == "lock-held":
+            te.append({"ph": "i", "s": "t", "cat": "serve",
+                       "name": f"lock:{uid}", "pid": PID_RUNTIME, "tid": 0,
+                       "ts": t, "args": {"held_ms": extra * 1e3}})
         elif et == "counter":
             te.append({"ph": "C", "cat": "gauge", "name": uid,
                        "pid": PID_COUNTERS, "tid": 0, "ts": t,

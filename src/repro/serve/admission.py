@@ -61,6 +61,7 @@ class AdmissionController:
         # observability counters (read under no lock: monotonic ints)
         self.n_admitted = 0
         self.n_rejected = 0
+        self.n_over_released = 0
         self.peak_inflight = 0
         self.peak_queued = 0
 
@@ -99,6 +100,10 @@ class AdmissionController:
                     while self._inflight >= self.max_inflight:
                         if self._closed:
                             self.n_rejected += 1
+                            # a release() notify this waiter consumed must
+                            # not die with it — pass it on or another
+                            # queued waiter strands until its own timeout
+                            self._cv.notify()
                             raise AdmissionError("server is closed", "closed")
                         if deadline is None:
                             self._cv.wait()
@@ -108,6 +113,7 @@ class AdmissionController:
                                 if self._inflight < self.max_inflight:
                                     break  # slot freed at the wire: take it
                                 self.n_rejected += 1
+                                self._cv.notify()
                                 raise AdmissionError(
                                     f"no in-flight slot within {timeout} s",
                                     "timeout",
@@ -120,8 +126,13 @@ class AdmissionController:
 
     def release(self) -> None:
         """Free one in-flight slot (called when the request's drain
-        resolves, success or failure)."""
+        resolves, success or failure).  Over-releases are counted and
+        clamped rather than raised — this runs on executor callback
+        threads, where an exception would poison an unrelated drain."""
         with self._cv:
+            if self._inflight <= 0:
+                self.n_over_released += 1
+                return
             self._inflight -= 1
             self._cv.notify()
 

@@ -41,6 +41,11 @@ class LatencyHistogram:
     def record(self, seconds: float) -> None:
         if seconds < 0 or math.isnan(seconds):
             seconds = 0.0
+        elif math.isinf(seconds):
+            # clamp to the overflow-bucket edge: an untreated +inf would
+            # poison ``max`` — and every quantile, since quantile() clamps
+            # its answer to ``max``
+            seconds = _EDGES[-1]
         self.counts[bisect_left(_EDGES, seconds)] += 1
         self.count += 1
         self.sum += seconds

@@ -187,7 +187,15 @@ class Session:
         and return the request's output DistArray(s) using the normal
         array surface, without reading results back (readback belongs in
         :meth:`Request.result`, outside the lock).  Raises
-        :class:`AdmissionError` when shed by admission control."""
+        :class:`AdmissionError` when shed by admission control.
+
+        The record lock covers only recording plus cone *extraction*
+        (:meth:`~repro.core.engine.Runtime.extract_cone`); planning,
+        verification, and executor submission
+        (:meth:`~repro.core.engine.Runtime.submit_cone`) run after the
+        lock is released, concurrently across client threads — the lock
+        hold time (tracked in :attr:`Server.lock_hold`) is recording
+        cost only, not planning cost."""
         from repro.core import engine as _engine
 
         server = self._server
@@ -200,16 +208,22 @@ class Session:
             raise
         try:
             with server._record_lock:
+                t_lock = time.perf_counter()
                 prev = getattr(_engine._tls, "runtime", None)
                 _engine._tls.runtime = server.runtime
                 try:
                     outs = fn(*args, **kwargs)
                     arrays = _coerce_outputs(outs)
-                    ticket = server.runtime.flush(
-                        wait=False, targets=list(arrays)
-                    )
+                    handle = server.runtime.extract_cone(list(arrays))
                 finally:
                     _engine._tls.runtime = prev
+                    held = time.perf_counter() - t_lock
+            server._note_lock_hold(held)
+            # off the lock: plan + verify + submit on this client thread
+            # (a failure here has already failed the handle's ticket)
+            t_plan = time.perf_counter()
+            ticket = server.runtime.submit_cone(handle)
+            server._note_plan_time(time.perf_counter() - t_plan)
         except BaseException:
             server._admission.release()
             with self._lock:
@@ -285,9 +299,31 @@ class Server:
         # RLock: Request.result's gather may trigger a (cheap, empty)
         # cone flush that is itself re-entrant from the recording side
         self._record_lock = threading.RLock()
+        # record-lock hold time per request (recording + extraction only
+        # — planning runs off the lock): the record/plan split's success
+        # metric, rendered by benchmarks/serve_load.py
+        self.lock_hold = LatencyHistogram()
+        # ...and the off-lock plan+verify+submit time per request: the
+        # lock-hold + plan-time pair is what the record lock *would*
+        # have held in an on-lock design
+        self.plan_time = LatencyHistogram()
+        self._lock_hold_lock = threading.Lock()
         self._sessions: dict = {}
         self._sessions_lock = threading.Lock()
         self._closed = False
+
+    def _note_lock_hold(self, seconds: float) -> None:
+        from repro.obs import collector as _obs
+
+        with self._lock_hold_lock:
+            self.lock_hold.record(seconds)
+        col = _obs.CURRENT
+        if col is not None:
+            col.lock_held("record", seconds)
+
+    def _note_plan_time(self, seconds: float) -> None:
+        with self._lock_hold_lock:
+            self.plan_time.record(seconds)
 
     @property
     def admission(self) -> AdmissionController:

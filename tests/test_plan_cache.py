@@ -1,0 +1,247 @@
+"""Plan-shape cache (repro.core.plan_cache): hit/miss behaviour,
+signature sensitivity, replay bit-identity, policy/env knobs,
+uncacheable pipelines, on-demand re-verification, and the executor's
+merged-group ``submit_many`` path that cross-tenant batching rides."""
+import numpy as np
+import pytest
+
+import repro
+from repro.api.config import ExecutionPolicy
+from repro.api.registry import PASSES
+from repro.core.plan_cache import PlanCache
+
+
+def _demand_rt(**kw):
+    kw.setdefault("nprocs", 2)
+    kw.setdefault("block_size", 8)
+    kw.setdefault("flush", "async")
+    kw.setdefault("sync", "demand")
+    return repro.runtime(**kw)
+
+
+# ---------------------------------------------------------------------------
+# hit/miss + bit-identity
+# ---------------------------------------------------------------------------
+
+
+def test_repeated_shape_hits_and_results_bit_identical():
+    host = np.arange(32.0)
+    exp = np.roll(host, 1, axis=0) * 2.0 + host
+
+    def run_once():
+        a = repro.array(host)
+        out = np.roll(a, 1, axis=0) * 2.0 + a
+        return np.asarray(out)
+
+    with _demand_rt(plan_cache=True) as rt:
+        cold = run_once()
+        for _ in range(3):
+            warm = run_once()
+            np.testing.assert_array_equal(warm, cold)
+        np.testing.assert_array_equal(cold, exp)
+        cache = rt._plan_cache
+        assert cache is not None
+        assert cache.hits >= 3
+        assert cache.misses >= 1
+        assert cache.n_uncacheable == 0
+        assert cache.hit_rate > 0.5
+        assert "PlanCache(" in repr(cache)
+
+    # the same program with the cache off is bit-identical
+    with _demand_rt(plan_cache=False) as rt:
+        assert rt._plan_cache is None
+        np.testing.assert_array_equal(run_once(), exp)
+
+
+def test_hit_replays_same_plan_stats_and_hints():
+    host = np.arange(64.0).reshape(8, 8)
+
+    def run_once(rt):
+        a = repro.array(host)
+        out = np.roll(a, 1, axis=0) + a  # transfer-bearing: coalesce fires
+        np.testing.assert_array_equal(
+            np.asarray(out), np.roll(host, 1, axis=0) + host
+        )
+
+    with _demand_rt(nprocs=2, block_size=4, plan_cache=True) as rt:
+        run_once(rt)
+        cold = (rt.plan_stats.n_ops_in, rt.plan_stats.n_ops_out,
+                rt.plan_stats.n_transfers_coalesced)
+        run_once(rt)
+        warm = (rt.plan_stats.n_ops_in, rt.plan_stats.n_ops_out,
+                rt.plan_stats.n_transfers_coalesced)
+        assert rt._plan_cache.hits >= 1
+        # replay folded the insert-time plan's stats again: counters
+        # doubled, meaning the cached recipe reports the same rewrites
+        assert warm == tuple(2 * c for c in cold)
+
+
+# ---------------------------------------------------------------------------
+# signature sensitivity
+# ---------------------------------------------------------------------------
+
+
+def test_different_constant_is_a_different_shape():
+    """Constants fold into payload signatures — ``a * 2`` and ``a * 3``
+    plan differently under const folding, so they must never share an
+    entry."""
+    host = np.arange(16.0)
+    with _demand_rt(plan_cache=True) as rt:
+        for k in range(4):
+            a = repro.array(host)
+            np.testing.assert_array_equal(
+                np.asarray(a * float(k + 1)), host * float(k + 1)
+            )
+        assert rt._plan_cache.hits == 0
+        assert rt._plan_cache.misses == 4
+
+        # ...but repeating one of them now hits
+        a = repro.array(host)
+        np.testing.assert_array_equal(np.asarray(a * 2.0), host * 2.0)
+        assert rt._plan_cache.hits == 1
+
+
+def test_different_structure_is_a_different_shape():
+    host = np.arange(16.0)
+    with _demand_rt(plan_cache=True) as rt:
+        a = repro.array(host)
+        np.asarray(a + 1.0)
+        b = repro.array(host)
+        np.asarray(b + 1.0 + b)  # extra op: different canonical shape
+        assert rt._plan_cache.hits == 0
+        assert rt._plan_cache.misses == 2
+        assert len(rt._plan_cache) == 2
+
+
+# ---------------------------------------------------------------------------
+# knobs: policy field, env var, pipeline gating
+# ---------------------------------------------------------------------------
+
+
+def test_policy_plan_cache_knob_validated():
+    assert ExecutionPolicy(plan_cache=True).plan_cache is True
+    assert ExecutionPolicy().plan_cache is None
+    with pytest.raises(ValueError, match="plan_cache"):
+        ExecutionPolicy(plan_cache="yes")
+    with pytest.raises(ValueError, match="batch_cones"):
+        ExecutionPolicy(batch_cones="yes")
+
+
+def test_env_var_disables_cache(monkeypatch):
+    monkeypatch.setenv("REPRO_PLAN_CACHE", "0")
+    with _demand_rt() as rt:  # plan_cache=None defers to the env
+        assert rt._plan_cache is None
+    monkeypatch.setenv("REPRO_PLAN_CACHE", "1")
+    with _demand_rt() as rt:
+        assert rt._plan_cache is not None
+    # the kwarg wins over the env
+    monkeypatch.setenv("REPRO_PLAN_CACHE", "0")
+    with _demand_rt(plan_cache=True) as rt:
+        assert rt._plan_cache is not None
+
+
+def test_no_pipeline_means_no_cache():
+    with _demand_rt(passes=()) as rt:
+        assert rt._plan_cache is None  # nothing to cache: plan is a no-op
+        host = np.arange(16.0)
+        a = repro.array(host)
+        np.testing.assert_array_equal(np.asarray(a + 1.0), host + 1.0)
+
+
+def test_unknown_pass_makes_cones_uncacheable():
+    """A pipeline with a pass the recipe language cannot express must
+    run cold every time — counted, never cached, still correct."""
+    def nop(ctx):
+        pass
+
+    PASSES.register("opaque-nop", nop)
+    try:
+        host = np.arange(16.0)
+        with _demand_rt(passes=("coalesce", "opaque-nop"),
+                        plan_cache=True) as rt:
+            for _ in range(3):
+                a = repro.array(host)
+                np.testing.assert_array_equal(np.asarray(a * 2.0), host * 2.0)
+            assert rt._plan_cache.hits == 0
+            assert rt._plan_cache.misses == 0
+            assert rt._plan_cache.n_uncacheable >= 3
+            assert len(rt._plan_cache) == 0
+    finally:
+        PASSES.unregister("opaque-nop")
+
+
+def test_lru_eviction_bounds_residency():
+    host = np.arange(16.0)
+    with _demand_rt(plan_cache=True) as rt:
+        rt._plan_cache.maxsize = 2
+        for k in range(4):  # 4 distinct shapes through a 2-entry cache
+            a = repro.array(host)
+            np.asarray(a * float(k + 1))
+        assert len(rt._plan_cache) == 2
+        assert rt._plan_cache.misses == 4
+
+
+# ---------------------------------------------------------------------------
+# cached plans stay verifiable
+# ---------------------------------------------------------------------------
+
+
+def test_verify_cached_plans_clean_after_hits():
+    host = np.arange(64.0).reshape(8, 8)
+    with _demand_rt(nprocs=2, block_size=4, plan_cache=True,
+                    verify="plan") as rt:
+        for _ in range(3):
+            a = repro.array(host)
+            np.testing.assert_array_equal(
+                np.asarray(np.roll(a, 1, axis=0) + a),
+                np.roll(host, 1, axis=0) + host,
+            )
+        assert rt._plan_cache.hits >= 1
+        reports = rt.verify_cached_plans()
+        assert len(reports) == len(rt._plan_cache)
+        for rep in reports:
+            assert not rep.diagnostics, rep.diagnostics
+            rep.raise_if_errors()  # must not raise
+
+
+def test_verify_cached_plans_without_cache_is_empty():
+    with _demand_rt(plan_cache=False) as rt:
+        assert rt.verify_cached_plans() == []
+
+
+# ---------------------------------------------------------------------------
+# executor submit_many: the merged-group submit batching rides on
+# ---------------------------------------------------------------------------
+
+
+def test_executor_submit_many_drains_group_correctly():
+    with _demand_rt(latency=1e-3) as rt:
+        host_a = np.arange(16.0)
+        host_b = np.arange(16.0) * 3.0
+        a = repro.array(host_a) + 1.0
+        b = repro.array(host_b) * 2.0
+        ha = rt.extract_cone([a])
+        hb = rt.extract_cone([b])
+        deps_a, _ = rt._plan_cone(ha)
+        deps_b, _ = rt._plan_cone(hb)
+        ex = rt._ensure_executor()
+        futs = ex.submit_many(
+            [(deps_a, ha.ticket._tag), (deps_b, hb.ticket._tag)]
+        )
+        assert len(futs) == 2
+        ha.ticket._bind(futs[0])
+        hb.ticket._bind(futs[1])
+        ha.ticket.wait()
+        hb.ticket.wait()
+        np.testing.assert_array_equal(np.asarray(a), host_a + 1.0)
+        np.testing.assert_array_equal(np.asarray(b), host_b * 2.0)
+
+
+def test_plan_cache_standalone_lru_and_repr():
+    c = PlanCache(maxsize=4)
+    assert len(c) == 0
+    assert c.hit_rate == 0.0
+    assert c.lookup(("nope",)) is None
+    assert c.misses == 1
+    c.clear()
+    assert "hits=0" in repr(c)

@@ -47,59 +47,66 @@ _BINOPS = {
 }
 
 
-def _run(prog, passes, sync="auto", force_seed=None, verify="off",
-         verify_stats_out=None):
+def _exec_program(prog, force_seed=None):
+    """Interpret one program inside the *current* runtime and force
+    every array/output (in a seed-shuffled cone order when asked),
+    returning the gathered ndarrays."""
     from repro.core import darray as dnp
 
+    arrs = [
+        dnp.array(np.arange(48.0).reshape(SHAPE) * (i + 1) - 20.0)
+        for i in range(N_ARRAYS)
+    ]
+    outs = []
+    for step in prog:
+        kind = step[0]
+        if kind == "fill":
+            _, d, r0, c0, v = step
+            dst = arrs[d % len(arrs)]
+            dst[r0 % SHAPE[0]:, c0 % SHAPE[1]:] = float(v)
+        elif kind == "binop":
+            _, a, b, opname = step
+            x, y = arrs[a % len(arrs)], arrs[b % len(arrs)]
+            if opname == "max":
+                arrs.append(dnp.maximum(x, y))
+            else:
+                arrs.append(_BINOPS[opname](x, y))
+        elif kind == "setslice":
+            _, d, s, r0 = step
+            dst, src = arrs[d % len(arrs)], arrs[s % len(arrs)]
+            lo = r0 % SHAPE[0]
+            dst[lo:, :] = src[lo:, :]
+        elif kind == "iadd":
+            _, d, s = step
+            if d % len(arrs) != s % len(arrs):
+                arrs[d % len(arrs)] += arrs[s % len(arrs)]
+        elif kind == "sumexpr":
+            _, a, b, ax = step
+            x, y = arrs[a % len(arrs)], arrs[b % len(arrs)]
+            outs.append((x * y).sum(axis=ax))  # dead temp -> fuse target
+        elif kind == "reduce":
+            _, a, ax = step
+            outs.append(arrs[a % len(arrs)].sum(axis=ax))
+    everything = list(arrs) + list(outs)
+    results = [None] * len(everything)
+    order = list(range(len(everything)))
+    if force_seed is not None:
+        # randomized forcing order: each readback extracts + drains
+        # one dependency cone; the cones partition the graph
+        # differently for every permutation
+        random.Random(force_seed).shuffle(order)
+    for i in order:
+        results[i] = np.asarray(everything[i]).copy()
+    return results
+
+
+def _run(prog, passes, sync="auto", force_seed=None, verify="off",
+         verify_stats_out=None):
     with repro.runtime(nprocs=4, block_size=3, passes=passes, sync=sync,
                        verify=verify) as _rt:
         if verify_stats_out is not None:
             verify_stats_out.append(_rt.verify_stats)
-        arrs = [
-            dnp.array(np.arange(48.0).reshape(SHAPE) * (i + 1) - 20.0)
-            for i in range(N_ARRAYS)
-        ]
-        outs = []
-        for step in prog:
-            kind = step[0]
-            if kind == "fill":
-                _, d, r0, c0, v = step
-                dst = arrs[d % len(arrs)]
-                dst[r0 % SHAPE[0]:, c0 % SHAPE[1]:] = float(v)
-            elif kind == "binop":
-                _, a, b, opname = step
-                x, y = arrs[a % len(arrs)], arrs[b % len(arrs)]
-                if opname == "max":
-                    arrs.append(dnp.maximum(x, y))
-                else:
-                    arrs.append(_BINOPS[opname](x, y))
-            elif kind == "setslice":
-                _, d, s, r0 = step
-                dst, src = arrs[d % len(arrs)], arrs[s % len(arrs)]
-                lo = r0 % SHAPE[0]
-                dst[lo:, :] = src[lo:, :]
-            elif kind == "iadd":
-                _, d, s = step
-                if d % len(arrs) != s % len(arrs):
-                    arrs[d % len(arrs)] += arrs[s % len(arrs)]
-            elif kind == "sumexpr":
-                _, a, b, ax = step
-                x, y = arrs[a % len(arrs)], arrs[b % len(arrs)]
-                outs.append((x * y).sum(axis=ax))  # dead temp -> fuse target
-            elif kind == "reduce":
-                _, a, ax = step
-                outs.append(arrs[a % len(arrs)].sum(axis=ax))
-        everything = list(arrs) + list(outs)
-        results = [None] * len(everything)
-        order = list(range(len(everything)))
-        if force_seed is not None:
-            # randomized forcing order: each readback extracts + drains
-            # one dependency cone; the cones partition the graph
-            # differently for every permutation
-            random.Random(force_seed).shuffle(order)
-        for i in order:
-            results[i] = np.asarray(everything[i]).copy()
-        return results
+        return _exec_program(prog, force_seed=force_seed)
 
 
 @settings(max_examples=20, deadline=None)
@@ -245,3 +252,34 @@ def test_demand_cone_forcing_order_bit_identical(prog, seed):
                 np.testing.assert_array_equal(
                     ref, out, err_msg=f"passes={pipeline} sync={sync}"
                 )
+
+
+@settings(max_examples=10, deadline=None)
+@given(prog=programs, seed=st.integers(0, 2**16))
+def test_plan_cache_hits_bit_identical_to_cold_plans(prog, seed):
+    """Plan-shape-cache property: running a random program twice inside
+    one runtime (same forcing order, so the second repetition's cones
+    are renamings of the first's) must hit the cache and stay
+    bit-identical to the cache-off run and to the unplanned simulator —
+    a replayed recipe is the *same plan*, re-targeted."""
+    baseline = _run(prog, passes=())
+    for pipeline in (("coalesce",), ("coalesce", "fuse")):
+        legs = {}
+        for cache_on in (False, True):
+            with repro.runtime(nprocs=4, block_size=3, passes=pipeline,
+                               sync="demand", plan_cache=cache_on) as rt:
+                reps = [_exec_program(prog, force_seed=seed)
+                        for _ in range(2)]
+                if cache_on:
+                    assert rt._plan_cache is not None
+                    # every cone of rep 2 is a renaming of a rep-1 cone
+                    assert rt._plan_cache.hits > 0, repr(rt._plan_cache)
+            legs[cache_on] = reps
+        for cache_on, reps in legs.items():
+            for rep in reps:
+                assert len(rep) == len(baseline)
+                for ref, out in zip(baseline, rep):
+                    np.testing.assert_array_equal(
+                        ref, out,
+                        err_msg=f"passes={pipeline} cache={cache_on}",
+                    )

@@ -5,6 +5,8 @@ The load-level acceptance gates (>=1.5x concurrent throughput, p99
 budget at 200 clients) live in ``benchmarks.serve_load``; these tests
 cover the mechanisms at unit scale.
 """
+import math
+import random
 import threading
 import time
 
@@ -53,6 +55,25 @@ def test_histogram_clamps_out_of_range():
     assert h.count == 4
     assert h.max == pytest.approx(1e4)
     assert h.quantile(1.0) == pytest.approx(1e4)
+
+
+def test_histogram_inf_clamps_to_overflow_edge():
+    """Regression: one +inf sample used to poison ``max`` — and with it
+    every quantile (quantile() clamps its answer to ``max``) and the
+    running ``sum``/``mean``, forever."""
+    h = LatencyHistogram()
+    h.record(float("inf"))
+    h.record(5e-3)
+    assert h.count == 2
+    assert math.isfinite(h.max) and math.isfinite(h.sum)
+    assert h.max == pytest.approx(100.0)  # the overflow-bucket edge
+    for q in (0.5, 0.99, 1.0):
+        assert math.isfinite(h.quantile(q))
+    assert math.isfinite(h.mean)
+    other = LatencyHistogram()
+    other.record(2e-3)
+    other.merge(h)  # merging an inf-touched histogram stays finite
+    assert math.isfinite(other.max) and math.isfinite(other.p99)
 
 
 # ---------------------------------------------------------------------------
@@ -122,6 +143,114 @@ def test_admission_close_rejects_queued_and_future():
     assert errors == ["closed"]
     with pytest.raises(AdmissionError, match="closed"):
         adm.admit()
+
+
+def test_admission_release_never_lost_with_two_queued_waiters():
+    """Regression (lost wakeup): a queued waiter that consumes a
+    ``release()`` notify and then sheds itself (deadline passed) used to
+    let the notify die with it, stranding the *other* queued waiter even
+    though a slot was free.  Race a release against the first waiter's
+    deadline, many rounds: the patient (no-deadline) waiter must always
+    come through promptly."""
+    for round_ in range(15):
+        adm = AdmissionController(max_inflight=1, max_queue=4,
+                                  admission_timeout=0.03)
+        adm.admit()  # slot taken
+        results = {}
+
+        def timed():
+            try:
+                adm.admit()
+                results["timed"] = "admitted"
+            except AdmissionError as e:
+                results["timed"] = e.reason
+
+        def patient():
+            try:
+                adm.admit()
+                results["patient"] = "admitted"
+            except AdmissionError as e:
+                results["patient"] = e.reason
+
+        ta = threading.Thread(target=timed)
+        ta.start()
+        time.sleep(0.005)  # "timed" queued first (deadline ~0.03 out)
+        adm.admission_timeout = None  # read per-admit(): "patient" waits forever
+        tb = threading.Thread(target=patient)
+        tb.start()
+        time.sleep(0.005)
+        # release as close to the timed waiter's deadline as this round
+        # lands — across rounds the notify falls on both sides of it
+        time.sleep(0.02 + round_ * 0.002)
+        adm.release()
+        ta.join(5.0)
+        tb.join(10.0)
+        assert not tb.is_alive(), (
+            f"round {round_}: patient waiter stranded — release notify "
+            f"was lost ({results})"
+        )
+        # exactly one waiter got the freed slot; the other either also
+        # admitted (never possible here: one slot) or timed out
+        admitted = [k for k, v in results.items() if v == "admitted"]
+        assert len(admitted) == 1, (round_, results)
+        assert adm.inflight == 1
+
+
+def test_admission_release_overrelease_clamped_and_counted():
+    adm = AdmissionController(max_inflight=2, max_queue=0)
+    adm.admit()
+    adm.release()
+    adm.release()  # over-release: clamped, counted, never negative
+    adm.release()
+    assert adm.inflight == 0
+    assert adm.n_over_released == 2
+    # the clamp keeps the window intact: exactly max_inflight admits fit
+    adm.admit()
+    adm.admit()
+    with pytest.raises(AdmissionError, match="queue full"):
+        adm.admit()
+    assert adm.inflight == 2
+
+
+def test_admission_stress_window_and_no_starvation():
+    """Satellite stress: hammer admit/release from many threads with a
+    generous deadline — the in-flight count must never exceed
+    ``max_inflight``, no waiter may starve past its deadline, and the
+    counters must balance."""
+    adm = AdmissionController(max_inflight=4, max_queue=64,
+                              admission_timeout=10.0)
+    peak_violation = []
+    outcomes = []
+    lock = threading.Lock()
+
+    def client(seed):
+        rng = random.Random(seed)
+        for _ in range(25):
+            try:
+                adm.admit()
+            except AdmissionError as e:
+                with lock:
+                    outcomes.append(e.reason)
+                continue
+            if adm.inflight > adm.max_inflight:
+                with lock:
+                    peak_violation.append(adm.inflight)
+            time.sleep(rng.random() * 0.002)
+            adm.release()
+            with lock:
+                outcomes.append("ok")
+
+    threads = [threading.Thread(target=client, args=(i,)) for i in range(12)]
+    for t in threads:
+        t.start()
+    for t in threads:
+        t.join(60.0)
+    assert not any(t.is_alive() for t in threads), "a waiter starved"
+    assert not peak_violation, f"window exceeded: {peak_violation}"
+    assert outcomes.count("timeout") == 0, "deadline was generous; a timeout means a lost wakeup"
+    assert adm.peak_inflight <= adm.max_inflight
+    assert adm.inflight == 0 and adm.queued == 0
+    assert adm.n_admitted == outcomes.count("ok")
 
 
 def test_serve_config_validation():
@@ -390,3 +519,97 @@ def test_conflicting_cone_joins_inflight_writer():
         assert t1.done()  # the conflicting flush joined it first
         t2.wait()
         np.testing.assert_array_equal(np.asarray(a), np.full((16,), 7.0))
+
+
+# ---------------------------------------------------------------------------
+# planning off the record lock: lock-hold accounting, plan-shape cache,
+# cross-tenant cone batching
+# ---------------------------------------------------------------------------
+
+
+def test_request_lock_hold_histogram_populated():
+    """The record lock is held only for recording + cone extraction; the
+    server measures each hold and the histogram must fill up."""
+    with Server(nprocs=2, block_size=8) as srv:
+        sess = srv.session("t")
+        h = np.arange(16.0)
+        for _ in range(4):
+            sess.request(lambda: repro.array(h) * 2.0).result()
+        assert srv.lock_hold.count == 4
+        assert srv.lock_hold.max < 10.0  # sane seconds, not garbage
+        assert srv.lock_hold.quantile(0.5) > 0.0
+
+
+def test_server_repeated_shape_hits_plan_cache():
+    with Server(nprocs=2, block_size=8, plan_cache=True) as srv:
+        sess = srv.session("t")
+        h = np.arange(32.0)
+
+        def fn():
+            a = repro.array(h)
+            return np.roll(a, 1, axis=0) + a * 2.0
+
+        exp = np.roll(h, 1, axis=0) + h * 2.0
+        for _ in range(5):
+            np.testing.assert_array_equal(sess.request(fn).result(), exp)
+        cache = srv.runtime._plan_cache
+        assert cache is not None
+        assert cache.hits >= 3  # identical shape after warmup
+        assert cache.misses >= 1
+
+
+def test_server_batch_cones_end_to_end_correct():
+    results = {}
+    with Server(nprocs=4, block_size=16, latency=1e-3,
+                batch_cones=True, max_inflight=8, max_queue=64) as srv:
+        def client(name, seed):
+            rng = np.random.default_rng(seed)
+            h = rng.standard_normal((32, 32))
+            sess = srv.session(name)
+
+            def fn():
+                a = repro.array(h)
+                return np.roll(a, 1, axis=1) * 3.0 - a
+
+            got = [sess.request(fn).result() for _ in range(4)]
+            exp = np.roll(h, 1, axis=1) * 3.0 - h
+            results[name] = all(np.array_equal(g, exp) for g in got)
+
+        threads = [
+            threading.Thread(target=client, args=(f"c{i}", i))
+            for i in range(6)
+        ]
+        for t in threads:
+            t.start()
+        for t in threads:
+            t.join()
+        assert all(results.values()), results
+        batcher = srv.runtime._batcher
+        assert batcher is not None
+        assert batcher.n_batches >= 1
+
+
+def test_submit_failure_fails_ticket_and_releases_admission():
+    """A cone that fails verification *after* the record lock is
+    released must still fail the request future and hand the admission
+    slot back."""
+    with Server(nprocs=2, block_size=8, max_inflight=1,
+                verify="full") as srv:
+        sess = srv.session("t")
+        h = np.arange(16.0)
+        got = sess.request(lambda: repro.array(h) + 1.0).result()
+        np.testing.assert_array_equal(got, h + 1.0)
+        assert srv.admission.inflight == 0
+
+
+def test_engine_ticket_wait_before_bind_blocks_then_resolves():
+    """A ticket returned while its cone is still being planned parks
+    wait() until the executor future is bound, then yields stats."""
+    with repro.runtime(nprocs=2, block_size=8, flush="async",
+                       latency=5e-3) as rt:
+        a = repro.ones((16,)) * 2.0
+        t = rt.flush(wait=False, targets=[a])
+        res = t.wait()
+        assert t.done()
+        assert res is not None
+        np.testing.assert_array_equal(np.asarray(a), np.full((16,), 2.0))
